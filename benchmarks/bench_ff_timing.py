@@ -1,0 +1,73 @@
+"""Paper Tables 1/5/10 + §3.4.3 (-CAT): ff-module time per minibatch,
+DENSE vs DYAD variants, forward and forward+backward, at OPT-125m and
+OPT-350m ff dimensions.
+
+CPU wall-times are not TPU times — the deliverable (as in the paper) is the
+RATIO column.  FLOP-derived speedup bounds are emitted alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import dyad, linear
+
+TOKENS = 2048           # minibatch tokens for timing (matmul-bound on CPU)
+
+DIMS = {
+    "opt125m": (768, 3072),
+    "opt350m": (1024, 4096),
+}
+
+VARIANTS = [
+    ("dyad_it_4", dyad.DyadSpec(n_dyad=4, variant="it")),
+    ("dyad_ot_4", dyad.DyadSpec(n_dyad=4, variant="ot")),
+    ("dyad_dt_4", dyad.DyadSpec(n_dyad=4, variant="dt")),
+    ("dyad_it_8", dyad.DyadSpec(n_dyad=8, variant="it")),
+    ("dyad_it_4_cat", dyad.DyadSpec(n_dyad=4, variant="it", cat=True)),
+]
+
+
+def _ff_dense(p, x):
+    h = jax.nn.relu(linear.apply(p["up"], x))
+    return linear.apply(p["down"], h)
+
+
+def _ff_dyad(p, x, spec, spec_down):
+    h = jax.nn.relu(dyad.apply(p["up"], x, spec))
+    return dyad.apply(p["down"], h, spec_down)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for model_name, (d, ff) in DIMS.items():
+        x = jax.random.normal(key, (TOKENS, d))
+
+        pd = {"up": linear.init(key, d, ff), "down": linear.init(key, ff, d)}
+        fwd = jax.jit(lambda p, x: _ff_dense(p, x))
+        bwd = jax.jit(jax.grad(lambda p, x: _ff_dense(p, x).sum()))
+        t_fwd_dense = time_fn(fwd, pd, x)
+        t_tot_dense = t_fwd_dense + time_fn(bwd, pd, x)
+        emit(f"ff_{model_name}_dense_fwd", t_fwd_dense, "ratio=1.00")
+        emit(f"ff_{model_name}_dense_total", t_tot_dense, "ratio=1.00")
+
+        for vname, spec in VARIANTS:
+            sd = dyad.DyadSpec(n_dyad=spec.n_dyad, variant=spec.variant,
+                               cat=spec.cat)
+            pv = {"up": dyad.init(key, d, ff, spec),
+                  "down": dyad.init(key, ff, d, sd)}
+            f = jax.jit(lambda p, x, s=spec, s2=sd: _ff_dyad(p, x, s, s2))
+            g = jax.jit(jax.grad(
+                lambda p, x, s=spec, s2=sd: _ff_dyad(p, x, s, s2).sum()))
+            t_fwd = time_fn(f, pv, x)
+            t_tot = t_fwd + time_fn(g, pv, x)
+            flop_bound = spec.n_dyad / 2
+            emit(f"ff_{model_name}_{vname}_fwd", t_fwd,
+                 f"ratio={t_fwd_dense / t_fwd:.2f};flop_bound={flop_bound:.1f}x")
+            emit(f"ff_{model_name}_{vname}_total", t_tot,
+                 f"ratio={t_tot_dense / t_tot:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Table 11 analog: memory & parameter footprint, DENSE vs DYAD,
+for the paper's OPT-125m (full config):
+
+* parameter counts (total + non-embedding, as in Pythia/the paper),
+* checkpoint size (exact on-disk bytes of the serialized pytree),
+* in-training memory (XLA memory_analysis of the compiled train step).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro import configs
+from repro.checkpoint.manager import flatten_with_paths
+from repro.optim import AdamW, schedule
+from repro.train import init_train_state, make_train_step
+
+
+def _stats(linear_spec: str):
+    cfg = configs.get("opt125m", linear=configs.linear_cfg(linear_spec),
+                      iota_embed=False)
+    specs = configs.params_specs(cfg)
+    flat = flatten_with_paths(specs)
+    total = sum(int(v.size) for v in jax.tree.leaves(specs))
+    emb = sum(int(v.size) for k, v in flat.items()
+              if k.startswith(("embed/", "pos/")))
+    ckpt_mb = sum(
+        int(v.size) * v.dtype.itemsize for v in jax.tree.leaves(specs)) / 2**20
+
+    opt = AdamW(lr=schedule.constant(1e-4))
+    state_specs = jax.eval_shape(
+        lambda: init_train_state(cfg, opt, jax.random.PRNGKey(0)))
+    batch = configs.input_specs(
+        cfg, configs.Shape("bench", "train", 128, 8))
+    compiled = jax.jit(make_train_step(cfg, opt),
+                       donate_argnums=0).lower(state_specs, batch).compile()
+    mem = compiled.memory_analysis()
+    train_mb = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                + mem.output_size_in_bytes - mem.alias_size_in_bytes) / 2**20
+    return total, total - emb, ckpt_mb, train_mb
+
+
+def run():
+    base = None
+    for spec in ("dense", "dyad_it_4", "dyad_ot_4", "dyad_dt_4", "dyad_it_8"):
+        total, nonemb, ckpt_mb, train_mb = _stats(spec)
+        if base is None:
+            base = train_mb
+        drop = 100.0 * (1 - train_mb / base)
+        emit(f"mem_opt125m_{spec}", 0.0,
+             f"params={total};nonemb={nonemb};ckpt_mb={ckpt_mb:.0f};"
+             f"train_mb={train_mb:.0f};gpu_mem_drop_pct={drop:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Paper §3.4.5 analog (MNIST probe): a 784->512->512->10 MLP classifier on
+the synthetic-clusters task, DENSE vs DYAD-IT(4) — accuracy parity and
+ff timing, on CPU exactly as the paper's probe ran on a Macbook CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import dyad, linear
+from repro.data import SyntheticClassification
+
+STEPS = 60
+
+
+def _mlp_init(key, use_dyad):
+    ks = jax.random.split(key, 3)
+    spec = dyad.DyadSpec(n_dyad=4, variant="it")
+    if use_dyad:
+        return {
+            "l1": dyad.init(ks[0], 784, 512, spec),
+            "l2": dyad.init(ks[1], 512, 512, spec),
+            "out": linear.init(ks[2], 512, 10),     # head stays dense
+        }, spec
+    return {
+        "l1": linear.init(ks[0], 784, 512),
+        "l2": linear.init(ks[1], 512, 512),
+        "out": linear.init(ks[2], 512, 10),
+    }, None
+
+
+def _apply(p, x, spec):
+    h = jax.nn.relu(dyad.apply(p["l1"], x, spec) if spec
+                    else linear.apply(p["l1"], x))
+    h = jax.nn.relu(dyad.apply(p["l2"], h, spec) if spec
+                    else linear.apply(p["l2"], h))
+    return linear.apply(p["out"], h)
+
+
+def _train_eval(use_dyad):
+    data = SyntheticClassification(n_classes=10, dim=784, batch=128)
+    p, spec = _mlp_init(jax.random.PRNGKey(0), use_dyad)
+
+    def loss_fn(p, b):
+        logits = _apply(p, b["x"], spec)
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(lp, b["labels"][:, None], 1).mean()
+
+    @jax.jit
+    def step(p, b):
+        g = jax.grad(loss_fn)(p, b)
+        return jax.tree.map(lambda w, gw: w - 0.05 * gw, p, g)
+
+    for i in range(STEPS):
+        p = step(p, data.batch_at(i))
+    test = data.batch_at(10_000)
+    acc = float((jnp.argmax(_apply(p, test["x"], spec), -1)
+                 == test["labels"]).mean())
+    fwd = jax.jit(lambda p, x: _apply(p, x, spec))
+    t = time_fn(fwd, p, test["x"], iters=3)
+    return acc, t
+
+
+def run():
+    acc_d, t_d = _train_eval(False)
+    acc_y, t_y = _train_eval(True)
+    emit("mnist_dense", t_d, f"acc={acc_d:.4f};ratio=1.00")
+    emit("mnist_dyad_it4", t_y,
+         f"acc={acc_y:.4f};ratio={t_d / t_y:.2f};"
+         f"acc_parity={'PASS' if acc_y >= 0.95 * acc_d else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Fig 6 analog: DYAD-vs-DENSE ff speedup at increasing model width
+(6-layer-capped OPT-like architecture, widths up to 4096).
+
+Emits measured CPU ratios and the analytic FLOP-bound ratio per width —
+the paper's claim is that the speedup GROWS with width.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core import dyad, linear
+
+TOKENS = 256
+WIDTHS = [768, 1024, 2048, 4096]
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    for d in WIDTHS:
+        ff = 4 * d
+        x = jax.random.normal(key, (TOKENS, d))
+        pd = {"up": linear.init(key, d, ff), "down": linear.init(key, ff, d)}
+        dense = jax.jit(lambda p, x: linear.apply(
+            p["down"], jax.nn.relu(linear.apply(p["up"], x))))
+        td = time_fn(dense, pd, x, iters=3)
+
+        spec = dyad.DyadSpec(n_dyad=4, variant="it")
+        pv = {"up": dyad.init(key, d, ff, spec),
+              "down": dyad.init(key, ff, d, spec)}
+        dy = jax.jit(lambda p, x: dyad.apply(
+            p["down"], jax.nn.relu(dyad.apply(p["up"], x, spec)), spec))
+        tv = time_fn(dy, pv, x, iters=3)
+        emit(f"width_{d}_dense_fwd", td, "ratio=1.00")
+        emit(f"width_{d}_dyad_it4_fwd", tv,
+             f"ratio={td / tv:.2f};flop_bound=2.0x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+
+* bench_ff_timing   — Tables 1, 5, 10 (ff time, DENSE vs DYAD variants) and
+                      §3.4.3 (the -CAT variant)
+* bench_quality     — Tables 2, 3 (quality parity; offline stand-in stream)
+* bench_memory      — Table 11 (params / checkpoint / in-training memory)
+* bench_width_sweep — Figure 6 (speedup vs model width)
+* bench_mnist       — §3.4.5 (vision probe on CPU)
+
+Roofline terms (EXPERIMENTS §Roofline) come from the dry-run
+(``python -m repro.launch.dryrun``), which needs the 512-device env and is
+therefore not run from here.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_ff_timing, bench_memory, bench_mnist,
+                            bench_quality, bench_width_sweep)
+
+    suites = {
+        "ff_timing": bench_ff_timing.run,
+        "quality": bench_quality.run,
+        "memory": bench_memory.run,
+        "width_sweep": bench_width_sweep.run,
+        "mnist": bench_mnist.run,
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        t0 = time.time()
+        suites[name]()
+        print(f"# suite {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

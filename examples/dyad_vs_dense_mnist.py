@@ -1,0 +1,10 @@
+"""The paper's vision probe (§3.4.5) as a runnable example: an MLP classifier
+with DENSE vs DYAD-IT linear layers on the synthetic-clusters task (offline
+MNIST stand-in), run on CPU exactly like the paper's Macbook experiment.
+
+    PYTHONPATH=src python examples/dyad_vs_dense_mnist.py
+"""
+from benchmarks import bench_mnist
+
+print("name,us_per_call,derived")
+bench_mnist.run()

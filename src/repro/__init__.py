@@ -1,0 +1,8 @@
+"""repro: DYAD structured-sparse linear layers in a multi-pod JAX framework.
+
+The paper's contribution (DYAD-IT/OT/DT and -CAT) lives in :mod:`repro.core`.
+Everything else is the substrate a production framework needs: model families,
+sharding, optimizer, data, checkpointing, launch/dry-run tooling.
+"""
+
+__version__ = "0.1.0"

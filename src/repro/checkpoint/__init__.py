@@ -1,0 +1,3 @@
+"""Async, atomic, mesh-agnostic checkpointing with elastic resharding."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.reshard import place, reshard_checkpoint  # noqa: F401

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-N, path-addressed.
+
+Layout per step::
+
+    <dir>/ckpt_<step>/arrays.npz     # flat {key-path: array}
+    <dir>/ckpt_<step>/manifest.json  # step, keys, shapes, dtypes
+
+Writes go to ``ckpt_<step>.tmp`` and are renamed atomically, so a crash
+mid-save can never corrupt the latest checkpoint; restore always picks the
+newest *complete* step.  Async saves run on a worker thread (training is not
+blocked by serialization); ``wait()`` joins before exit/next save.
+
+Restore is **template-addressed**: arrays are matched to the target pytree by
+key-path, so restoring into a model re-built under a *different mesh* (elastic
+scaling) or into a partially-changed pytree (added buffers) is well-defined.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def flatten_with_paths(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(p): v for p, v in flat}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        # snapshot to host memory synchronously (cheap), serialize async.
+        host = {k: np.asarray(v) for k, v in flatten_with_paths(tree).items()}
+        self.wait()
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: dict):
+        final = os.path.join(self.directory, f"ckpt_{step}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                     for k, v in host.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.directory, f"ckpt_{s}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if (name.startswith("ckpt_") and not name.endswith(".tmp")
+                    and os.path.exists(os.path.join(full, "manifest.json"))):
+                steps.append(int(name.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None):
+        """Returns (step, tree) with arrays matched by key-path into
+        ``template``'s structure.  Raises KeyError on missing paths."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        data = np.load(os.path.join(self.directory, f"ckpt_{step}",
+                                    "arrays.npz"))
+
+        def pick(path, leaf):
+            key = _path_str(path)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch at {key}: ckpt {arr.shape} vs "
+                    f"template {leaf.shape}")
+            return arr
+
+        tree = jax.tree_util.tree_map_with_path(pick, template)
+        return step, tree

@@ -1,0 +1,23 @@
+"""Elastic resharding: place a restored (host) pytree onto a new mesh.
+
+Checkpoints are mesh-agnostic (full arrays addressed by key-path), so moving
+from mesh A to mesh B is: restore on host -> ``place`` with B's shardings.
+This is the restart path when the cluster grows/shrinks between jobs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def place(tree, shardings):
+    """device_put every leaf with its target sharding (pytree-aligned or a
+    single sharding applied to all leaves)."""
+    if jax.tree_util.treedef_is_leaf(jax.tree.structure(
+            shardings, is_leaf=lambda s: hasattr(s, "spec") or s is None)):
+        return jax.tree.map(lambda x: jax.device_put(x, shardings), tree)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+def reshard_checkpoint(manager, template, shardings, step=None):
+    step, tree = manager.restore(template, step)
+    return step, place(tree, shardings)

@@ -1,0 +1,15 @@
+"""Architecture configs: 10 assigned archs + the paper's own (OPT, Pythia)."""
+from repro.configs.base import (  # noqa: F401
+    ARCHS,
+    DENSE,
+    DYAD_DEFAULT,
+    PAPER_ARCHS,
+    SHAPES,
+    Shape,
+    cell_runnable,
+    get,
+    input_specs,
+    linear_cfg,
+    params_specs,
+    sub_quadratic,
+)

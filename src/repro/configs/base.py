@@ -1,0 +1,131 @@
+"""Config registry, dry-run shapes, and ShapeDtypeStruct input specs.
+
+Every assigned architecture registers ``full()`` (the exact published config)
+and ``smoke()`` (a reduced same-family config for CPU tests).  The DYAD knob
+defaults to the paper's technique (IT, n_dyad=4, ff scope) and is overridable
+per instantiation (``--linear dense`` in the launchers gives the baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factory
+from repro.models import model
+from repro.models.config import ModelCfg
+
+DYAD_DEFAULT = factory.LinearCfg(impl="dyad", n_dyad=4, variant="it", scope="ff")
+DENSE = factory.DENSE
+
+
+def linear_cfg(spec: str) -> factory.LinearCfg:
+    """Parse "dense" | "dyad_it" | "dyad_ot_8" | "dyad_dt_4_cat" |
+    "dyad_it_4_fused" (mixed-variant fused ff; EXPERIMENTS §Perf)."""
+    if spec == "dense":
+        return DENSE
+    parts = spec.split("_")
+    assert parts[0] == "dyad", spec
+    variant = parts[1] if len(parts) > 1 else "it"
+    n = int(parts[2]) if len(parts) > 2 and parts[2].isdigit() else 4
+    return factory.LinearCfg(impl="dyad", n_dyad=n, variant=variant,
+                             cat="cat" in parts, fuse_mlp="fused" in parts,
+                             scope="ff")
+
+
+# ---------------------------------------------------------------------------
+# shapes (the assignment's 4 cells; every arch pairs with all of them)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str              # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def sub_quadratic(cfg: ModelCfg) -> bool:
+    """long_500k runs only for archs with bounded attention reach."""
+    return cfg.family in ("ssm",) or (
+        cfg.family == "hybrid" and cfg.window is not None)
+
+
+def cell_runnable(cfg: ModelCfg, shape: Shape) -> tuple:
+    """(runnable, reason-if-skipped)."""
+    if shape.name == "long_500k" and not sub_quadratic(cfg):
+        return False, "full-attention arch: O(S^2) at 500k (DESIGN §4)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelCfg, shape: Shape, cache_dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = cfg.cdtype
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.frontend_dim), f)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.frontend_dim), f)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.frontend_dim), f)
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.frontend_dim), f)
+        return specs
+    # decode: one new token against a cache of length seq_len
+    cache = jax.eval_shape(
+        lambda: model.init_cache(cfg, B, S, dtype=cache_dtype))
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32), "cache": cache}
+
+
+def params_specs(cfg: ModelCfg) -> dict:
+    return jax.eval_shape(
+        lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+ARCHS = [
+    "qwen3_0_6b", "phi3_medium_14b", "qwen2_5_32b", "llama3_405b",
+    "qwen2_moe_a2_7b", "llama4_maverick_400b_a17b", "whisper_medium",
+    "mamba2_780m", "phi3_vision_4_2b", "hymba_1_5b",
+]
+PAPER_ARCHS = ["opt125m", "opt350m", "pythia160m"]
+
+
+def get(arch: str, *, smoke: bool = False,
+        linear: Optional[factory.LinearCfg] = None, **overrides) -> ModelCfg:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    cfg = (mod.smoke if smoke else mod.full)()
+    if linear is not None:
+        cfg = cfg.replace(linear=linear)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def all_archs():
+    return list(ARCHS)

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: DYAD structured-sparse linear layers.
+
+- :mod:`repro.core.dyad`    — DYAD-IT/OT/DT (+ -CAT execution path) + oracle.
+- :mod:`repro.core.linear`  — the DENSE baseline.
+- :mod:`repro.core.factory` — config-driven drop-in substitution by site/scope.
+"""
+from repro.core import dyad, factory, linear  # noqa: F401
+from repro.core.dyad import DyadSpec  # noqa: F401
+from repro.core.factory import DENSE, LinearCfg  # noqa: F401

@@ -1,0 +1,226 @@
+"""DYAD structured near-sparse linear layers (the paper's core contribution).
+
+A DYAD layer approximates a dense linear ``y = x @ W.T + b`` (``W: f_out x f_in``)
+with the sum of two block-structured components, each stored as a 3-D tensor of
+shape ``(n_dyad, d_out, d_in)`` where ``f_in = n_dyad * d_in`` and
+``f_out = n_dyad * d_out``:
+
+* ``w1`` — BLOCKDIAG: a block-diagonal matrix.
+* ``w2`` — BLOCKTRANS: block-diagonal *after* a fixed strided feature
+  permutation.  The permutation is a pure re-view (reshape + transpose), so it
+  costs no data movement; which side it lands on defines the variant:
+
+  - ``it`` (Input Transpose):  permute input features of component 2.
+  - ``ot`` (Output Transpose): permute output features of component 2.
+  - ``dt`` (Double Transpose): both.
+
+Activations here are feature-last (``x: (..., f_in) -> y: (..., f_out)``), the
+transpose of the paper's column-major convention; the algebra is identical.
+
+Compute/parameter cost: ``2 * f_out * f_in / n_dyad`` vs dense ``f_out * f_in``
+— an ``n_dyad / 2`` reduction in both FLOPs and weight bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+VARIANTS = ("it", "ot", "dt")
+
+
+@dataclasses.dataclass(frozen=True)
+class DyadSpec:
+    """Static configuration of one DYAD layer."""
+
+    n_dyad: int = 4
+    variant: str = "it"           # "it" | "ot" | "dt"
+    cat: bool = False             # paper's -CAT: one bmm over 2*n_dyad blocks
+    use_kernel: bool = False      # route through the Pallas kernel (TPU target)
+
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown DYAD variant {self.variant!r}")
+        if self.n_dyad < 1:
+            raise ValueError("n_dyad must be >= 1")
+
+
+def resolve_n_dyad(f_in: int, f_out: int, requested: int) -> int:
+    """Largest n <= requested dividing both feature dims (paper App. 5.1)."""
+    n = min(requested, f_in, f_out)
+    while n > 1 and (f_in % n or f_out % n):
+        n -= 1
+    return max(n, 1)
+
+
+def init(
+    key: jax.Array,
+    f_in: int,
+    f_out: int,
+    spec: DyadSpec,
+    *,
+    bias: bool = True,
+    dtype: jnp.dtype = jnp.float32,
+) -> Params:
+    """Paper-faithful init: uniform(-k, k) with k = 1/sqrt(f_in)."""
+    n = spec.n_dyad
+    if f_in % n or f_out % n:
+        raise ValueError(
+            f"DYAD dims must divide n_dyad: f_in={f_in} f_out={f_out} n_dyad={n}"
+        )
+    d_in, d_out = f_in // n, f_out // n
+    k = 1.0 / jnp.sqrt(jnp.asarray(f_in, jnp.float32))
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {
+        "w1": jax.random.uniform(k1, (n, d_out, d_in), dtype, -k, k),
+        "w2": jax.random.uniform(k2, (n, d_out, d_in), dtype, -k, k),
+    }
+    if bias:
+        p["b"] = jax.random.uniform(k3, (f_out,), dtype, -k, k)
+    return p
+
+
+def _lead(x: jax.Array) -> tuple:
+    return x.shape[:-1]
+
+
+def _block_views(x: jax.Array, n: int, d_in: int, variant: str):
+    """Return (x1, x2): the block-contiguous and (maybe) strided views.
+
+    x1[..., g, i] = x[..., g*d_in + i]       (BLOCKDIAG input, all variants)
+    x2[..., g, i] = x[..., i*n + g]          (BLOCKTRANS input, it/dt)
+    x2 = x1                                   (ot — permutation is on the output)
+    """
+    lead = _lead(x)
+    x1 = x.reshape(*lead, n, d_in)
+    if variant in ("it", "dt"):
+        x2 = jnp.swapaxes(x.reshape(*lead, d_in, n), -1, -2)
+    else:  # "ot"
+        x2 = x1
+    return x1, x2
+
+
+def _combine_outputs(z1: jax.Array, z2: jax.Array, variant: str) -> jax.Array:
+    """Fold per-block outputs back to a flat feature axis.
+
+    z*: (..., n_dyad, d_out).  BLOCKDIAG output is always block-contiguous:
+    y1[..., g*d_out + o] = z1[..., g, o].  BLOCKTRANS output is strided for
+    ot/dt: y2[..., o*n + g] = z2[..., g, o].
+    """
+    lead = z1.shape[:-2]
+    f_out = z1.shape[-2] * z1.shape[-1]
+    y1 = z1.reshape(*lead, f_out)
+    if variant in ("ot", "dt"):
+        y2 = jnp.swapaxes(z2, -1, -2).reshape(*lead, f_out)
+    else:
+        y2 = z2.reshape(*lead, f_out)
+    return y1 + y2
+
+
+def apply(params: Params, x: jax.Array, spec: DyadSpec) -> jax.Array:
+    """y = DYAD(x).  x: (..., f_in) -> (..., f_out)."""
+    w1, w2 = params["w1"], params["w2"]
+    n, d_out, d_in = w1.shape
+    if x.shape[-1] != n * d_in:
+        raise ValueError(f"expected {n * d_in} input features, got {x.shape[-1]}")
+
+    if spec.use_kernel:
+        from repro.kernels import ops as kops
+
+        y = kops.dyad_mm(x, w1, w2, variant=spec.variant)
+    else:
+        w1, w2 = w1.astype(x.dtype), w2.astype(x.dtype)
+        x1, x2 = _block_views(x, n, d_in, spec.variant)
+        if spec.cat:
+            # paper §3.4.3: one batched matmul over the concatenated blocks.
+            xc = jnp.concatenate([x1, x2], axis=-2)          # (..., 2n, d_in)
+            wc = jnp.concatenate([w1, w2], axis=0)           # (2n, d_out, d_in)
+            z = jnp.einsum("...gi,goi->...go", xc, wc)
+            z1, z2 = z[..., :n, :], z[..., n:, :]
+        else:
+            # faithful two-step path (two sequential bmms).
+            z1 = jnp.einsum("...gi,goi->...go", x1, w1)
+            z2 = jnp.einsum("...gi,goi->...go", x2, w2)
+        y = _combine_outputs(z1, z2, spec.variant)
+
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def apply_blocks(params: Params, x: jax.Array, spec: DyadSpec) -> jax.Array:
+    """IT-variant apply that RETURNS the block layout ``(..., n, d_out)``
+    instead of flattening.  Used by the fused DYAD MLP: under tensor
+    parallelism the flat ``(..., f_out)`` view of a d_out-sharded hidden is
+    interleaved (inexpressible for GSPMD -> forced all-gather); the 3-D
+    layout shards cleanly."""
+    if spec.variant != "it":
+        raise ValueError("apply_blocks is defined for the IT variant")
+    w1, w2 = params["w1"], params["w2"]
+    n, d_out, d_in = w1.shape
+    w1, w2 = w1.astype(x.dtype), w2.astype(x.dtype)
+    x1, x2 = _block_views(x, n, d_in, "it")
+    z = (jnp.einsum("...gi,goi->...go", x1, w1)
+         + jnp.einsum("...gi,goi->...go", x2, w2))
+    if "b" in params:
+        z = z + params["b"].astype(z.dtype).reshape(n, d_out)
+    return z
+
+
+def apply_ot_from_blocks(params: Params, h: jax.Array) -> jax.Array:
+    """OT-variant apply consuming a block-layout input ``(..., n, d_in)``.
+
+    OT's two components BOTH read block-contiguous input (the permutation is
+    on the output side, where it is a free local re-view after the TP
+    reduction) — so a d_in-sharded block-layout hidden is consumed with zero
+    data movement.  Returns the flat ``(..., f_out)``."""
+    w1, w2 = params["w1"], params["w2"]
+    n, d_out, d_in = w1.shape
+    w1, w2 = w1.astype(h.dtype), w2.astype(h.dtype)
+    z1 = jnp.einsum("...gi,goi->...go", h, w1)
+    z2 = jnp.einsum("...gi,goi->...go", h, w2)
+    y = _combine_outputs(z1, z2, "ot")
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def to_dense(params: Params, spec: DyadSpec) -> jax.Array:
+    """Reconstruct the full structured (f_out, f_in) matrix — the oracle.
+
+    apply(params, x, spec) == x @ to_dense(params, spec).T + b, exactly.
+    Overlapping nonzeros between the two components ADD (the paper notes the
+    components "share some non-zero elements"; the layer computes Y1 + Y2).
+    """
+    w1, w2 = params["w1"], params["w2"]
+    n, d_out, d_in = w1.shape
+    f_in, f_out = n * d_in, n * d_out
+    g = jnp.arange(n)[:, None, None]
+    o = jnp.arange(d_out)[None, :, None]
+    i = jnp.arange(d_in)[None, None, :]
+
+    rows1, cols1 = g * d_out + o, g * d_in + i                 # BLOCKDIAG
+    if spec.variant == "it":
+        rows2, cols2 = g * d_out + o, i * n + g
+    elif spec.variant == "ot":
+        rows2, cols2 = o * n + g, g * d_in + i
+    else:  # "dt"
+        rows2, cols2 = o * n + g, i * n + g
+
+    W = jnp.zeros((f_out, f_in), w1.dtype)
+    W = W.at[jnp.broadcast_to(rows1, w1.shape), jnp.broadcast_to(cols1, w1.shape)].add(w1)
+    W = W.at[jnp.broadcast_to(rows2, w2.shape), jnp.broadcast_to(cols2, w2.shape)].add(w2)
+    return W
+
+
+def param_count(f_in: int, f_out: int, n_dyad: int, bias: bool = True) -> int:
+    return 2 * f_out * f_in // n_dyad + (f_out if bias else 0)
+
+
+def flops(batch: int, f_in: int, f_out: int, n_dyad: int) -> int:
+    """Forward multiply-add FLOPs (2 per MAC), both components."""
+    return 2 * 2 * batch * f_out * f_in // n_dyad

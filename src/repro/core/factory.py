@@ -1,0 +1,95 @@
+"""Config-driven linear substitution — DYAD as a first-class framework feature.
+
+Every linear layer in the framework is created through this factory with a
+``site`` tag (``"ff"``, ``"attn"``, ``"ssm"``, ``"head"``, ...).  The model
+config's :class:`LinearCfg` decides, per site, whether the layer is the DENSE
+baseline or a DYAD variant — so flipping one config field swaps every ff
+projection of any architecture to DYAD, exactly the paper's drop-in story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dyad, linear
+
+Params = Dict[str, Any]
+
+# sites a LinearCfg scope can capture
+_SCOPES = {
+    "none": frozenset(),
+    "ff": frozenset({"ff"}),
+    "ff+attn": frozenset({"ff", "attn"}),
+    "ff+ssm": frozenset({"ff", "ssm"}),
+    "all": frozenset({"ff", "attn", "ssm", "head"}),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearCfg:
+    """Static, hashable description of the framework's linear-layer policy."""
+
+    impl: str = "dense"            # "dense" | "dyad"
+    n_dyad: int = 4
+    variant: str = "it"            # "it" | "ot" | "dt"
+    cat: bool = False
+    use_kernel: bool = False
+    scope: str = "ff"              # which sites receive DYAD when impl == "dyad"
+    # beyond-paper (paper Future Work §4.i — heterogeneous variant mix):
+    # fuse the ff module with up=IT / down=OT and a 3-D block-layout hidden,
+    # eliminating the interleaved-sharding reshape between projections under
+    # tensor parallelism (see EXPERIMENTS §Perf).
+    fuse_mlp: bool = False
+
+    def dyad_at(self, site: str) -> bool:
+        if self.impl != "dyad":
+            return False
+        try:
+            return site in _SCOPES[self.scope]
+        except KeyError:
+            raise ValueError(f"unknown dyad scope {self.scope!r}") from None
+
+    def replace(self, **kw) -> "LinearCfg":
+        return dataclasses.replace(self, **kw)
+
+    def spec(self, f_in: int, f_out: int) -> dyad.DyadSpec:
+        n = dyad.resolve_n_dyad(f_in, f_out, self.n_dyad)
+        return dyad.DyadSpec(
+            n_dyad=n, variant=self.variant, cat=self.cat, use_kernel=self.use_kernel
+        )
+
+
+DENSE = LinearCfg(impl="dense")
+
+
+def init(
+    key: jax.Array,
+    f_in: int,
+    f_out: int,
+    cfg: LinearCfg,
+    *,
+    site: str = "ff",
+    bias: bool = True,
+    dtype: jnp.dtype = jnp.float32,
+) -> Params:
+    if cfg.dyad_at(site):
+        return dyad.init(key, f_in, f_out, cfg.spec(f_in, f_out), bias=bias, dtype=dtype)
+    return linear.init(key, f_in, f_out, bias=bias, dtype=dtype)
+
+
+def apply(params: Params, x: jax.Array, cfg: LinearCfg, *, site: str = "ff") -> jax.Array:
+    if "w1" in params:  # dyad params
+        n, d_out, d_in = params["w1"].shape
+        return dyad.apply(params, x, cfg.spec(n * d_in, n * d_out))
+    return linear.apply(params, x)
+
+
+def param_count(f_in: int, f_out: int, cfg: LinearCfg, *, site: str = "ff",
+                bias: bool = True) -> int:
+    if cfg.dyad_at(site):
+        n = dyad.resolve_n_dyad(f_in, f_out, cfg.n_dyad)
+        return dyad.param_count(f_in, f_out, n, bias)
+    return linear.param_count(f_in, f_out, bias)

@@ -1,0 +1,42 @@
+"""DENSE baseline linear layer (the paper's comparison point)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def init(
+    key: jax.Array,
+    f_in: int,
+    f_out: int,
+    *,
+    bias: bool = True,
+    dtype: jnp.dtype = jnp.float32,
+) -> Params:
+    """Matches the paper's DENSE baseline (and torch.nn.Linear default):
+    uniform(-k, k) with k = 1/sqrt(f_in)."""
+    k = 1.0 / jnp.sqrt(jnp.asarray(f_in, jnp.float32))
+    k1, k2 = jax.random.split(key)
+    p: Params = {"w": jax.random.uniform(k1, (f_out, f_in), dtype, -k, k)}
+    if bias:
+        p["b"] = jax.random.uniform(k2, (f_out,), dtype, -k, k)
+    return p
+
+
+def apply(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].T.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def param_count(f_in: int, f_out: int, bias: bool = True) -> int:
+    return f_out * f_in + (f_out if bias else 0)
+
+
+def flops(batch: int, f_in: int, f_out: int) -> int:
+    return 2 * batch * f_out * f_in

@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic, resumable, host-sharded synthetic streams."""
+from repro.data.synthetic import SyntheticClassification, SyntheticLM  # noqa: F401

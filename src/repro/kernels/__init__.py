@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the DYAD matmul.
+
+- dyad_mm.py — pl.pallas_call kernels with explicit BlockSpec VMEM tiling.
+- ops.py     — jit'd differentiable wrapper (custom_vjp).
+- ref.py     — pure-jnp oracle used by tests and by the non-kernel path.
+"""
+from repro.kernels import ref  # noqa: F401

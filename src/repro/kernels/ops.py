@@ -1,0 +1,95 @@
+"""jit'd differentiable wrapper around the fused DYAD Pallas kernel.
+
+``dyad_mm(x, w1, w2, variant=...)`` is the public op:
+
+* forward — builds the two strided block views (pure re-views, folded into the
+  operands' layouts by XLA) and calls the fused kernel;
+* backward — custom VJP in pure jnp einsums (the transposed products are plain
+  bmms that XLA maps straight onto the MXU; the permutations are bijective so
+  the cotangent "un-views" are exact inverses of the forward views).
+
+On non-TPU backends the kernel runs in ``interpret=True`` mode, which executes
+the kernel body in Python for bit-correct validation on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dyad_mm import dyad_mm_blocks, dyad_mm_blocks_two
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _split_cotangent(g, n: int, variant: str):
+    """g: (..., f_out) -> (z1bar, z2bar): (..., n, d_out) per-component."""
+    d_out = g.shape[-1] // n
+    lead = g.shape[:-1]
+    z1bar = g.reshape(*lead, n, d_out)
+    if variant in ("ot", "dt"):
+        z2bar = jnp.swapaxes(g.reshape(*lead, d_out, n), -1, -2)
+    else:
+        z2bar = z1bar
+    return z1bar, z2bar
+
+
+def _unview(dx1, dx2, variant: str):
+    """Fold per-view input cotangents back onto the flat feature axis."""
+    lead = dx1.shape[:-2]
+    f_in = dx1.shape[-2] * dx1.shape[-1]
+    out = dx1.reshape(*lead, f_in)
+    if variant in ("it", "dt"):
+        out = out + jnp.swapaxes(dx2, -1, -2).reshape(*lead, f_in)
+    else:
+        out = out + dx2.reshape(*lead, f_in)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dyad_mm(variant: str):
+    @jax.custom_vjp
+    def op(x, w1, w2):
+        n, d_out, _ = w1.shape
+        lead = x.shape[:-1]
+        x2d = x.reshape(-1, x.shape[-1])
+        x1, x2 = ref.block_views(x2d, n, variant)
+        w1c, w2c = w1.astype(x.dtype), w2.astype(x.dtype)
+        if variant == "it":
+            # IT: both components share the block-contiguous OUTPUT layout,
+            # so one fused accumulator suffices (the "super--CAT" path).
+            z = dyad_mm_blocks(x1, x2, w1c, w2c, interpret=_interpret())
+            y = z.reshape(-1, n * d_out)
+        else:
+            # OT/DT: component 2 writes a strided output layout; the kernel
+            # emits both products and the re-view happens here (zero-copy).
+            z1, z2 = dyad_mm_blocks_two(x1, x2, w1c, w2c, interpret=_interpret())
+            y = ref.combine(z1, z2, variant)
+        return y.reshape(*lead, n * d_out)
+
+    def fwd(x, w1, w2):
+        return op(x, w1, w2), (x, w1, w2)
+
+    def bwd(resids, g):
+        x, w1, w2 = resids
+        n = w1.shape[0]
+        x1, x2 = ref.block_views(x, n, variant)
+        z1bar, z2bar = _split_cotangent(g, n, variant)
+        dw1 = jnp.einsum("...gi,...go->goi", x1, z1bar).astype(w1.dtype)
+        dw2 = jnp.einsum("...gi,...go->goi", x2, z2bar).astype(w2.dtype)
+        dx1 = jnp.einsum("...go,goi->...gi", z1bar, w1.astype(g.dtype))
+        dx2 = jnp.einsum("...go,goi->...gi", z2bar, w2.astype(g.dtype))
+        dx = _unview(dx1, dx2, variant).astype(x.dtype)
+        return dx, dw1, dw2
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def dyad_mm(x, w1, w2, *, variant: str = "it"):
+    """Fused DYAD matmul: (..., f_in) -> (..., f_out), no bias."""
+    return _make_dyad_mm(variant)(x, w1, w2)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused DYAD matmul kernel.
+
+``dyad_mm_ref`` computes exactly what ``kernels.ops.dyad_mm`` computes:
+the sum of the BLOCKDIAG and BLOCKTRANS contributions for a given variant,
+*without* bias (bias is added by the caller).  Shapes:
+
+    x        (..., f_in)                 f_in  = n_dyad * d_in
+    w1, w2   (n_dyad, d_out, d_in)       f_out = n_dyad * d_out
+    returns  (..., f_out)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_views(x, n: int, variant: str):
+    """(x1, x2) per-block input views; see repro.core.dyad._block_views."""
+    d_in = x.shape[-1] // n
+    lead = x.shape[:-1]
+    x1 = x.reshape(*lead, n, d_in)
+    if variant in ("it", "dt"):
+        x2 = jnp.swapaxes(x.reshape(*lead, d_in, n), -1, -2)
+    else:
+        x2 = x1
+    return x1, x2
+
+
+def combine(z1, z2, variant: str):
+    lead = z1.shape[:-2]
+    f_out = z1.shape[-2] * z1.shape[-1]
+    y1 = z1.reshape(*lead, f_out)
+    if variant in ("ot", "dt"):
+        y2 = jnp.swapaxes(z2, -1, -2).reshape(*lead, f_out)
+    else:
+        y2 = z2.reshape(*lead, f_out)
+    return y1 + y2
+
+
+def dyad_mm_ref(x, w1, w2, *, variant: str = "it"):
+    n = w1.shape[0]
+    x1, x2 = block_views(x, n, variant)
+    z1 = jnp.einsum("...gi,goi->...go", x1, w1.astype(x.dtype))
+    z2 = jnp.einsum("...gi,goi->...go", x2, w2.astype(x.dtype))
+    return combine(z1, z2, variant)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Only the dry-run sees 512 placeholder devices;
+# tests and benchmarks see the real single CPU device.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.checkpoint.manager import flatten_with_paths  # noqa: E402
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh, make_rules  # noqa: E402
+from repro.models import model  # noqa: E402
+from repro.optim import AdamW, schedule  # noqa: E402
+from repro.serve import make_serve_step  # noqa: E402
+from repro.sharding import (batch_shardings, cache_shardings,  # noqa: E402
+                            state_shardings)
+from repro.sharding import ctx as shard_ctx  # noqa: E402
+from repro.train import init_train_state, make_train_step  # noqa: E402
+
+# archs big enough to need ZeRO/FSDP over the data axis
+FSDP_ARCHS = {"llama3_405b", "llama4_maverick_400b_a17b", "qwen2_5_32b",
+              "phi3_medium_14b"}
+
+
+def active_param_count(cfg, params_specs) -> int:
+    """Params participating in per-token matmuls: excludes gather-only
+    embedding tables (re-added once if tied/used as the unembed head),
+    scales expert leaves by top_k/n_experts."""
+    flat = flatten_with_paths(params_specs)
+    total = 0.0
+    table = 0
+    for path, leaf in flat.items():
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if path.startswith("embed/") or path.startswith("pos/"):
+            if path.startswith("embed/"):
+                table = n
+            continue
+        if "experts/" in path:
+            total += n * cfg.top_k / max(cfg.n_experts, 1)
+            continue
+        total += n
+    # the unembedding matmul is real per-token compute
+    total += table if "head/table" not in flat else 0
+    return int(total)
+
+
+def dense_equiv_params(cfg) -> int:
+    """Param count of the DENSE twin (for DYAD-vs-DENSE accounting)."""
+    dense_cfg = cfg.replace(linear=configs.DENSE)
+    specs = configs.params_specs(dense_cfg)
+    return active_param_count(dense_cfg, specs)
+
+
+def make_opt(cfg) -> AdamW:
+    # bf16 params pair with an fp32 master copy (mixed-precision recipe);
+    # moments drop to bf16 for the biggest archs (memory plan, DESIGN §5).
+    bf16 = cfg.param_dtype == "bfloat16"
+    return AdamW(lr=schedule.warmup_cosine(3e-4, 2000, 100_000),
+                 moment_dtype="bfloat16" if bf16 else "float32",
+                 master=bf16)
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
+                  linear_spec: str = "dyad_it_4", fsdp=None,
+                  seq_shard: bool = False, overrides=None):
+    cfg = configs.get(arch, linear=configs.linear_cfg(linear_spec),
+                      **(overrides or {}))
+    shape = configs.SHAPES[shape_name]
+    ok, reason = configs.cell_runnable(cfg, shape)
+    if not ok:
+        return None, {"skipped": reason, "arch": arch, "shape": shape_name}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    use_fsdp = (arch in FSDP_ARCHS) if fsdp is None else fsdp
+    rules = make_rules(multi_pod=multi_pod, fsdp=use_fsdp)
+    meta = {"arch": arch, "shape": shape_name, "linear": linear_spec,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "fsdp": use_fsdp, "kind": shape.kind}
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = 1
+    for a in rules.dp:
+        dp_size *= sizes[a]
+    # logits batch sharding must divide the (possibly tiny) batch
+    out_batch_spec = (P(rules.dp_spec)
+                      if shape.global_batch % dp_size == 0 else P())
+
+    # sharding constraints bake in at trace time -> wrap the lowering
+    with shard_ctx.activation_sharding(mesh, dp=rules.dp, model=rules.model,
+                                       seq_shard=seq_shard):
+        if shape.kind == "train":
+            opt = make_opt(cfg)
+            state_specs = jax.eval_shape(
+                lambda: init_train_state(cfg, opt, jax.random.PRNGKey(0)))
+            batch_specs = configs.input_specs(cfg, shape)
+            st_sh = state_shardings(mesh, state_specs, rules)
+            b_sh = batch_shardings(mesh, batch_specs, rules)
+            fn = make_train_step(cfg, opt)
+            jfn = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                          out_shardings=(st_sh, NamedSharding(mesh, P())),
+                          donate_argnums=(0,))
+            lowered = jfn.lower(state_specs, batch_specs)
+        elif shape.kind == "prefill":
+            params_specs = configs.params_specs(cfg)
+            batch_specs = configs.input_specs(cfg, shape)
+            p_sh = state_shardings(mesh, {"params": params_specs},
+                                   rules)["params"]
+            b_sh = batch_shardings(mesh, batch_specs, rules)
+
+            def fn(params, batch):
+                # production prefill emits last-position logits (the full
+                # (B,S,V) fp32 tensor would be ~40GB/device at 32k x 152k)
+                return model.forward(cfg, params, batch, last_only=True)[0]
+
+            jfn = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                          out_shardings=NamedSharding(mesh, out_batch_spec))
+            lowered = jfn.lower(params_specs, batch_specs)
+        else:  # decode
+            params_specs = configs.params_specs(cfg)
+            specs = configs.input_specs(cfg, shape)
+            p_sh = state_shardings(mesh, {"params": params_specs},
+                                   rules)["params"]
+            c_sh = cache_shardings(mesh, specs["cache"], rules)
+            t_sh = batch_shardings(mesh, {"tokens": specs["tokens"]},
+                                   rules)["tokens"]
+            fn = make_serve_step(cfg)
+            jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                          out_shardings=(NamedSharding(mesh, out_batch_spec),
+                                         c_sh),
+                          donate_argnums=(1,))
+            lowered = jfn.lower(params_specs, specs["cache"],
+                                specs["tokens"])
+
+    meta["cfg"] = cfg
+    meta["shape_obj"] = shape
+    meta["n_devices"] = mesh.devices.size
+    return lowered, meta
+
+
+def run_cell(arch, shape_name, *, multi_pod, linear_spec="dyad_it_4",
+             fsdp=None, outdir=None, seq_shard=False, tag_suffix="",
+             overrides=None):
+    t0 = time.time()
+    lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                  linear_spec=linear_spec, fsdp=fsdp,
+                                  seq_shard=seq_shard, overrides=overrides)
+    if lowered is None:
+        print(f"SKIP  {arch:28s} {shape_name:12s} {meta['skipped']}")
+        return meta
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cfg, shape = meta.pop("cfg"), meta.pop("shape_obj")
+    n_active = active_param_count(cfg, configs.params_specs(cfg))
+    res = roofline.analyze(compiled, cfg, shape, meta["n_devices"], n_active)
+    res.update(meta)
+    res.update({
+        "active_params": n_active,
+        "dense_equiv_active_params": dense_equiv_params(cfg),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    })
+    mem = res["memory_analysis"]
+    gb = mem.get("peak_bytes_est", 0) / 2**30
+    print(f"OK    {arch:28s} {shape_name:12s} mesh={'multi' if multi_pod else 'single'} "
+          f"peak={gb:6.2f}GiB/dev flops/dev={res['flops_per_device']:.3e} "
+          f"compute={res['compute_s']*1e3:8.2f}ms memory={res['memory_s']*1e3:8.2f}ms "
+          f"coll={res['collective_s']*1e3:8.2f}ms dom={res['bottleneck']:10s} "
+          f"useful={res['useful_flops_ratio']:.2f} compile={t_compile:.0f}s")
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{linear_spec}" + tag_suffix
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1, default=str)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--linear", default="dyad_it_4")
+    ap.add_argument("--fsdp", default=None, type=lambda s: s == "1")
+    ap.add_argument("--sp", action="store_true", help="sequence-shard residual")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = list(configs.SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    failures = []
+    for mp in meshes:
+        outdir = os.path.join(args.outdir, mp)
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    run_cell(arch, shape, multi_pod=(mp == "multi"),
+                             linear_spec=args.linear, fsdp=args.fsdp,
+                             outdir=outdir, seq_shard=args.sp,
+                             tag_suffix="__sp" if args.sp else "")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mp, arch, shape, repr(e)))
+                    print(f"FAIL  {arch:28s} {shape:12s} {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES"); raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

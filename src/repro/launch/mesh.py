@@ -1,0 +1,25 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (device count is locked at first jax init)."""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import MeshRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_rules(*, multi_pod: bool = False, fsdp: bool = False) -> MeshRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return MeshRules(model="model", dp=dp, fsdp=("data",) if fsdp else None)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires XLA_FLAGS host device count)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

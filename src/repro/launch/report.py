@@ -1,0 +1,177 @@
+"""Assemble EXPERIMENTS.md from dry-run JSONs + the perf iteration log.
+
+    PYTHONPATH=src python -m repro.launch.report \
+        --dryrun-dir experiments/dryrun --out EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro import configs
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _load(dryrun_dir: str, mesh: str):
+    cells = {}
+    for f in glob.glob(os.path.join(dryrun_dir, mesh, "*.json")):
+        r = json.load(open(f))
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        tag = "__".join(parts[3:]) if len(parts) > 3 else "base"
+        key = (r["arch"], r["shape"], r.get("linear", "?"), tag)
+        cells[key] = r
+    return cells
+
+
+def variants_table(cells, triples):
+    """Side-by-side §Perf points: (arch, shape, [(label, linear, tag), ...])."""
+    rows = ["| cell | variant | peak GiB/dev | compute s | memory s | collective s | bound s | useful |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch, shape, variants in triples:
+        for label, linear, tag in variants:
+            r = cells.get((arch, shape, linear, tag))
+            if r is None:
+                continue
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            peak = r["memory_analysis"].get("peak_bytes_est", 0) / 2**30
+            rows.append(
+                f"| {arch}/{shape} | {label} | {peak:.1f} | "
+                f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                f"{r['collective_s']:.3f} | {bound:.3f} | "
+                f"{r['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def _fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def _skip_reason(arch, shape_name):
+    cfg = configs.get(arch)
+    ok, reason = configs.cell_runnable(cfg, configs.SHAPES[shape_name])
+    return None if ok else reason
+
+
+def dryrun_table(cells, linear="dyad_it_4", variant="base"):
+    rows = ["| arch | shape | peak GiB/dev | params GiB/dev | FLOPs/dev | HBM GB/dev | wire GB/dev | #coll | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in configs.ARCHS:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, linear, variant))
+            if r is None:
+                reason = _skip_reason(arch, shape)
+                if reason:
+                    rows.append(f"| {arch} | {shape} | SKIP | | {reason} | | | | |")
+                continue
+            mem = r["memory_analysis"]
+            rows.append(
+                f"| {arch} | {shape} | {_fmt_bytes(mem.get('peak_bytes_est', 0))} "
+                f"| {_fmt_bytes(mem.get('argument_bytes', 0))} "
+                f"| {r['flops_per_device']:.3e} "
+                f"| {r['bytes_per_device'] / 1e9:.1f} "
+                f"| {r['collective']['wire_bytes'] / 1e9:.2f} "
+                f"| {r['collective']['count']} | {r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells, linear="dyad_it_4", variant="base"):
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | MODEL_FLOPS | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in configs.ARCHS:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape, linear, variant))
+            if r is None:
+                continue
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"**{r['bottleneck']}** | {r['model_flops_global']:.3e} | "
+                f"{r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--perf-log", default="experiments/perf_log.md")
+    ap.add_argument("--preamble", default="experiments/preamble.md")
+    ap.add_argument("--bench", default="bench_output.txt")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    single = _load(args.dryrun_dir, "single")
+    multi = _load(args.dryrun_dir, "multi")
+
+    parts = ["# EXPERIMENTS\n"]
+    if os.path.exists(args.preamble):
+        parts.append(open(args.preamble).read())
+
+    parts.append("\n## §Dry-run — single pod (16x16 = 256 chips)\n")
+    parts.append(dryrun_table(single))
+    parts.append("\n\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(
+        "Proves the `pod` axis shards: every runnable cell lowers AND "
+        "compiles on the 512-chip mesh.\n")
+    parts.append(dryrun_table(multi))
+
+    parts.append("\n\n## §Roofline — single pod, per-device terms\n")
+    parts.append(
+        "`compute_s = HLO_FLOPs/197e12`, `memory_s = HLO_bytes/819e9`, "
+        "`collective_s = ring-model wire bytes/50e9`; all per device from "
+        "loop-aware HLO parsing (see repro/launch/hlo_stats.py). "
+        "`useful` = 6·N·D (or inference analog) / global HLO FLOPs.\n")
+    parts.append(roofline_table(single))
+
+    parts.append("\n\n## §Perf — paper-faithful baseline vs optimized "
+                 "(hillclimbed cells)\n")
+    parts.append(variants_table(single, [
+        ("qwen3_0_6b", "train_4k", [
+            ("DENSE (paper baseline)", "dense", "base"),
+            ("DYAD-IT(4) faithful", "dyad_it_4", "base"),
+            ("DYAD-IT(4) fused ff [beyond-paper]", "dyad_it_4_fused", "base"),
+            ("DYAD-IT(8) fused ff", "dyad_it_8_fused", "base"),
+        ]),
+        ("llama4_maverick_400b_a17b", "train_4k", [
+            ("DENSE (paper baseline)", "dense", "base"),
+            ("DYAD-IT(4) + EP anchors [B1+B2]", "dyad_it_4", "base"),
+            ("  + accum=2 [B3, not adopted]", "dyad_it_4", "accum2"),
+        ]),
+        ("llama3_405b", "train_4k", [
+            ("DENSE (paper baseline)", "dense", "base"),
+            ("DYAD-IT(4) faithful", "dyad_it_4", "base"),
+            ("DYAD-IT(4) fused ff [C3]", "dyad_it_4_fused", "base"),
+            ("  + sequence-parallel [C1, mixed]", "dyad_it_4", "sp"),
+            ("  + accum=4 [C2, not adopted]", "dyad_it_4", "accum4"),
+        ]),
+    ]))
+
+    if os.path.exists(args.perf_log):
+        parts.append("\n\n## §Perf — hillclimbing log\n")
+        parts.append(open(args.perf_log).read())
+
+    if os.path.exists(args.bench):
+        parts.append(
+            "\n\n## §Benchmarks (paper-table analogs, CPU)\n\n"
+            "Reading guide: `quality_*` reproduces the paper's parity claim "
+            "(all DYAD variants ≥ 0.99 of DENSE learning gain; bar is 0.90). "
+            "`width_*` reproduces Fig 6's trend (speedup grows with width). "
+            "Wall-clock `ratio`s are single-core-CPU GEMM artifacts — one "
+            "large matmul beats batched small blocks on this host; the "
+            "`flop_bound` column and the §Roofline compute terms carry the "
+            "TPU-target speedup (paper's V100 numbers benefited from kernel-"
+            "launch amortization that XLA/CPU does not exhibit).\n```\n")
+        parts.append(open(args.bench).read())
+        parts.append("```\n")
+
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Single-host (this container) it runs real steps on the local device(s); on a
+real cluster the same entrypoint runs under ``jax.distributed.initialize()``
+(multi-host: one process per host, the data pipeline shards by process index,
+and the mesh comes from ``mesh.make_production_mesh``).
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch opt125m --smoke \
+        --steps 100 --linear dyad_it_4
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --smoke \
+        --steps 50 --linear dense --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.optim import AdamW, Compressor, schedule
+from repro.train import Trainer, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--linear", default=None,
+                    help="dense | dyad_<variant>_<n>[_cat]")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    linear = configs.linear_cfg(args.linear) if args.linear else None
+    cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
+    print(f"[train] arch={cfg.name} family={cfg.family} "
+          f"linear={cfg.linear.impl}({cfg.linear.variant},n={cfg.linear.n_dyad})")
+
+    opt = AdamW(lr=schedule.warmup_cosine(args.lr, args.steps // 10 + 1,
+                                          args.steps))
+    comp = Compressor(codec=args.compress)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                       global_batch=args.batch, seed=args.seed,
+                       shard=jax.process_index(),
+                       num_shards=jax.process_count())
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(args.seed),
+                             compressor=comp)
+    step = jax.jit(make_train_step(cfg, opt, compressor=comp),
+                   donate_argnums=0)
+
+    trainer = Trainer(step, state, data, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, log_every=10)
+    trainer.install_preemption_handler()
+    _, metrics = trainer.run(args.steps)
+    print(f"[train] done at step {trainer.step}: "
+          f"loss={float(metrics['loss']):.4f} "
+          f"stragglers={len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

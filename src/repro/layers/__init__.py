@@ -1,0 +1,11 @@
+"""Neural-network substrate layers; every linear goes through repro.core.factory."""
+from repro.layers import (  # noqa: F401
+    attention,
+    embed,
+    frontend,
+    mlp,
+    moe,
+    norms,
+    rotary,
+    ssm,
+)

@@ -1,0 +1,239 @@
+"""Grouped-query attention with RoPE, qk-norm, QKV-bias, sliding windows,
+cross-attention, KV-cache decode, and an online-softmax chunked path for long
+sequences (bounded memory; the production path for the 32k shapes).
+
+The Q/K/V/O projections are created through the linear factory with
+``site="attn"`` — DYAD substitutes them when the config scope says so.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factory
+from repro.layers import norms
+from repro.layers.rotary import apply_rope
+from repro.sharding import ctx as shard_ctx
+
+NEG_INF = -1e30
+
+
+def init_attention(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    lin_cfg: factory.LinearCfg,
+    *,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    out_bias: bool = False,
+    dtype=jnp.float32,
+):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": factory.init(ks[0], d_model, n_heads * head_dim, lin_cfg,
+                           site="attn", bias=qkv_bias, dtype=dtype),
+        "wk": factory.init(ks[1], d_model, n_kv * head_dim, lin_cfg,
+                           site="attn", bias=qkv_bias, dtype=dtype),
+        "wv": factory.init(ks[2], d_model, n_kv * head_dim, lin_cfg,
+                           site="attn", bias=qkv_bias, dtype=dtype),
+        "wo": factory.init(ks[3], n_heads * head_dim, d_model, lin_cfg,
+                           site="attn", bias=out_bias, dtype=dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = norms.init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = norms.init_rmsnorm(head_dim, dtype)
+    return p
+
+
+def _mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """Boolean (..., S, T) validity mask from absolute positions."""
+    m = jnp.broadcast_to(kpos[..., None, :] >= 0,
+                         jnp.broadcast_shapes(qpos[..., :, None].shape,
+                                              kpos[..., None, :].shape))
+    if causal:
+        m &= kpos[..., None, :] <= qpos[..., :, None]
+    if window is not None:
+        m &= qpos[..., :, None] - kpos[..., None, :] < window
+    return m
+
+
+def _naive_sdpa(q, k, v, qpos, kpos, causal, window):
+    """q: (B,S,K,G,h); k,v: (B,T,K,h) -> (B,S,K,G,h).
+
+    Inputs stay in the activation dtype; score ACCUMULATION and softmax run
+    in fp32 (preferred_element_type), probabilities are cast back for the AV
+    matmul.  Scores are laid out (B,S,K,G,T) — q's natural layout — so the
+    einsum chain needs no score-sized transposes (§Perf A4)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bskgh,btkh->bskgt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    m = _mask(qpos, kpos, causal, window)            # (S, T) or (B,S,T)
+    m = (m[:, :, None, None, :] if m.ndim == 3
+         else m[None, :, None, None, :])
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bskgt,btkh->bskgh", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
+    """Online-softmax over key chunks: memory O(S * chunk) instead of O(S*T)."""
+    B, T = k.shape[0], k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    nchunks = -(-T // chunk)
+    pad = nchunks * chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-(10 ** 9))
+    kc = k.reshape(B, nchunks, chunk, *k.shape[2:]).swapaxes(0, 1)
+    vc = v.reshape(B, nchunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+    pc = kpos.reshape(nchunks, chunk)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("bskgh,btkh->bskgt", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask(qpos, pb, causal, window)[None, :, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    S, K, G, h = q.shape[1], q.shape[2], q.shape[3], q.shape[4]
+    init = (
+        jnp.full((B, S, K, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, S, K, G), jnp.float32),
+        jnp.zeros((B, S, K, G, h), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)                           # (B,S,K,G,h)
+
+
+def _q_block_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
+    """Block BOTH q and k: unrolled q-blocks with static causal/window bands
+    (skips fully-masked key ranges), online-softmax inside each block.
+    Memory per block: O(chunk^2) scores instead of O(S*T)."""
+    B, S, K, G, h = q.shape
+    T = k.shape[1]
+    nq = S // chunk
+    banded = causal and T == S   # q/k aligned (plain forward pass)
+    outs = []
+    for i in range(nq):
+        qb = q[:, i * chunk:(i + 1) * chunk]
+        qp = qpos[i * chunk:(i + 1) * chunk]
+        hi = (i + 1) * chunk if banded else T
+        lo = max(0, i * chunk - window + 1) if (window and banded) else 0
+        kb, vb, pb = k[:, lo:hi], v[:, lo:hi], kpos[lo:hi]
+        if hi - lo <= 2 * chunk:
+            ob = _naive_sdpa(qb, kb, vb, qp, pb, causal, window)
+        else:
+            ob = _chunked_sdpa(qb, kb, vb, qp, pb, causal, window, chunk)
+        outs.append(ob)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(
+    params,
+    x,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    lin_cfg: factory.LinearCfg,
+    rope_theta: Optional[float] = 10000.0,
+    positions=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: Optional[int] = None,
+    kv_input=None,          # cross-attention source (B, T, D)
+    cache=None,             # {"k","v","idx"} for decode
+):
+    """Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    K, G = n_kv, n_heads // n_kv
+    q = factory.apply(params["wq"], x, lin_cfg, site="attn").reshape(B, S, n_heads, head_dim)
+    src = kv_input if kv_input is not None else x
+    Tsrc = src.shape[1]
+    k = factory.apply(params["wk"], src, lin_cfg, site="attn").reshape(B, Tsrc, K, head_dim)
+    v = factory.apply(params["wv"], src, lin_cfg, site="attn").reshape(B, Tsrc, K, head_dim)
+
+    if "q_norm" in params:
+        q = norms.rmsnorm(params["q_norm"], q)
+        k = norms.rmsnorm(params["k_norm"], k)
+
+    # anchor GSPMD: heads over model (or seq-parallel attention as fallback)
+    q = shard_ctx.constrain_heads(q)
+    k = shard_ctx.constrain_kv(k)
+    v = shard_ctx.constrain_kv(v)
+
+    if positions is None:
+        offset = cache["idx"] if cache is not None else 0
+        positions = offset + jnp.arange(S)
+    qpos = positions
+    if rope_theta is not None and kv_input is None:
+        q = apply_rope(q, jnp.broadcast_to(qpos, (S,)), rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(qpos, (Tsrc,)) if cache is None
+                       else jnp.broadcast_to(qpos, (Tsrc,)), rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_input is None:
+        idx = cache["idx"]
+        L = cache["k"].shape[1]
+        if S == 1:
+            # ring-buffer write: supports caches bounded to the attention
+            # window (slot = idx % L).  For full-length caches idx < L and
+            # this reduces to a plain indexed write.
+            slot = idx % L
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            j = jnp.arange(L)
+            kpos = idx - ((idx - j) % L)          # position held by each slot
+            kpos = jnp.where(kpos >= 0, kpos, -(10 ** 9))
+        else:
+            # multi-token (prefill) write requires idx + S <= cache length.
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            kpos = jnp.arange(L)
+            kpos = jnp.where(kpos < idx + S, kpos, -(10 ** 9))
+        k, v = ck, cv
+        new_cache = {"k": ck, "v": cv, "idx": idx + S}
+    else:
+        kpos = jnp.arange(k.shape[1])
+
+    qg = q.reshape(B, S, K, G, head_dim)
+    if (chunk is not None and cache is None and kv_input is None
+            and S > chunk and S % chunk == 0 and qpos.ndim == 1):
+        o = _q_block_sdpa(qg, k, v, qpos, kpos, causal, window, chunk)
+    elif chunk is not None and k.shape[1] > chunk:
+        o = _chunked_sdpa(qg, k, v, qpos, kpos, causal, window, chunk)
+    else:
+        o = _naive_sdpa(qg, k, v, qpos, kpos, causal, window)
+    o = o.reshape(B, S, n_heads * head_dim)
+    out = factory.apply(params["wo"], o, lin_cfg, site="attn")
+    return out, new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,27 @@
+"""Token embedding / unembedding (kept dense — see DESIGN §Arch-applicability)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_model, jnp.float32))
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * scale}
+
+
+def embed(params, tokens, *, iota: bool = False):
+    if iota:
+        # one-hot matmul: vocab stays contracted => fwd is a psum-able dot and
+        # bwd (d_table) is a plain matmul — no scatter onto the sharded table.
+        table = params["table"]
+        onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        return jnp.einsum("...v,vd->...d", onehot, table)
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x, *, tied_table=None):
+    """Logits in fp32 (loss stability)."""
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))

@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` archs
+specify the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+The stubs are honest about their interface: they take precomputed embeddings,
+apply a small trainable projector + positional signal, and hand off to the
+backbone.  Swapping in a real conv/CLIP frontend touches only this file.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d // 2)]))
+    return pe
+
+
+def init_frontend(key, d_in: int, d_model: int, dtype=jnp.float32):
+    """Projector from precomputed modality embeddings into the backbone width."""
+    return {"proj": linear.init(key, d_in, d_model, bias=True, dtype=dtype)}
+
+
+def apply_frontend(params, feats, *, add_positions: bool = True):
+    """feats: (B, T, d_in) precomputed frame/patch embeddings -> (B, T, d_model)."""
+    x = linear.apply(params["proj"], feats)
+    if add_positions:
+        x = x + sinusoidal_positions(x.shape[1], x.shape[2]).astype(x.dtype)
+    return x

@@ -1,0 +1,70 @@
+"""Transformer ff module — THE site the paper targets with DYAD.
+
+Supports SwiGLU (gate/up/down) and single-activation (GELU/ReLU) variants; all
+projections go through the linear factory with ``site="ff"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factory
+from repro.sharding import ctx as shard_ctx
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+}
+
+
+def init_mlp(key, d_model: int, d_ff: int, lin_cfg: factory.LinearCfg, *,
+             act: str = "swiglu", bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "gate": factory.init(ks[0], d_model, d_ff, lin_cfg, site="ff",
+                                 bias=bias, dtype=dtype),
+            "up": factory.init(ks[1], d_model, d_ff, lin_cfg, site="ff",
+                               bias=bias, dtype=dtype),
+            "down": factory.init(ks[2], d_ff, d_model, lin_cfg, site="ff",
+                                 bias=bias, dtype=dtype),
+        }
+    return {
+        "up": factory.init(ks[0], d_model, d_ff, lin_cfg, site="ff",
+                           bias=bias, dtype=dtype),
+        "down": factory.init(ks[1], d_ff, d_model, lin_cfg, site="ff",
+                             bias=bias, dtype=dtype),
+    }
+
+
+def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
+    """Mixed-variant fused ff: up=IT (strided view on the replicated input),
+    down=OT (strided view on the reduced output) — the hidden stays in the
+    DYAD block layout (..., n, d_out) end-to-end, so its TP sharding on
+    d_out never hits an inexpressible flat reshape (no all-gather)."""
+    from repro.core import dyad as dyad_lib
+
+    n = params["up"]["w1"].shape[0]
+    spec = dyad_lib.DyadSpec(n_dyad=n, variant="it")
+    if act == "swiglu":
+        g = dyad_lib.apply_blocks(params["gate"], x, spec)
+        u = dyad_lib.apply_blocks(params["up"], x, spec)
+        h = jax.nn.silu(g) * u
+    else:
+        h = _ACTS[act](dyad_lib.apply_blocks(params["up"], x, spec))
+    h = shard_ctx.constrain_ff_hidden(h)     # (..., n, d_out): last dim TP
+    return dyad_lib.apply_ot_from_blocks(params["down"], h)
+
+
+def apply_mlp(params, x, lin_cfg: factory.LinearCfg, *, act: str = "swiglu"):
+    if lin_cfg.fuse_mlp and "w1" in params.get("down", {}):
+        return _fused_dyad_mlp(params, x, lin_cfg, act)
+    if act == "swiglu":
+        g = factory.apply(params["gate"], x, lin_cfg, site="ff")
+        u = factory.apply(params["up"], x, lin_cfg, site="ff")
+        h = jax.nn.silu(g) * u
+    else:
+        h = _ACTS[act](factory.apply(params["up"], x, lin_cfg, site="ff"))
+    h = shard_ctx.constrain_ff_hidden(h)
+    return factory.apply(params["down"], h, lin_cfg, site="ff")

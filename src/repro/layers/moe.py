@@ -1,0 +1,194 @@
+"""Mixture-of-Experts ff module (top-k routed + shared experts).
+
+Dispatch is GShard-style with **batch rows as capacity groups** and an optional
+``lax.scan`` over sequence chunks, chosen so the layer composes with GSPMD
+without shard_map:
+
+* tokens stay on their data shard (groups = batch rows, sharded over
+  ``data``/``pod``);
+* expert weights are sharded over ``model`` on the leading expert axis (EP);
+* expert compute is fully local — each (data, model) device processes its
+  batch rows against its expert shard;
+* the only collective is ONE all-reduce of the combined output over ``model``
+  per layer (inserted by GSPMD at the combine einsum) — identical comm to a
+  dense TP MLP.
+
+Capacity: ``C = ceil(Sc * top_k * capacity_factor / n_experts)`` per batch row
+per chunk; overflow tokens are dropped (standard dropped-token MoE).  Experts
+are padded up to a multiple of the mesh ``model`` size; padded experts are
+masked to -inf in the router and receive no tokens.
+
+Each expert's FFN goes through the linear factory (``site="ff"``) — DYAD
+applies *inside* experts, composing the paper's technique with EP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factory, linear
+from repro.layers import mlp as mlp_lib
+from repro.sharding import ctx as shard_ctx
+
+
+def init_moe(
+    key,
+    d_model: int,
+    expert_d_ff: int,
+    n_experts: int,
+    top_k: int,
+    lin_cfg: factory.LinearCfg,
+    *,
+    n_shared: int = 0,
+    shared_d_ff: Optional[int] = None,
+    act: str = "swiglu",
+    n_experts_padded: Optional[int] = None,
+    dtype=jnp.float32,
+):
+    e_pad = n_experts_padded or n_experts
+    ks = jax.random.split(key, 3)
+    expert_keys = jax.random.split(ks[0], e_pad)
+    experts = jax.vmap(
+        lambda k: mlp_lib.init_mlp(k, d_model, expert_d_ff, lin_cfg, act=act,
+                                   dtype=dtype)
+    )(expert_keys)
+    p = {
+        "router": linear.init(ks[1], d_model, e_pad, bias=False, dtype=dtype),
+        "experts": experts,
+    }
+    if n_shared:
+        sk1, sk2 = jax.random.split(ks[2])
+        p["shared"] = mlp_lib.init_mlp(
+            sk1, d_model, shared_d_ff or n_shared * expert_d_ff, lin_cfg,
+            act=act, dtype=dtype)
+        p["shared_gate"] = linear.init(sk2, d_model, 1, bias=False, dtype=dtype)
+    return p
+
+
+def _route(params, x, n_experts: int, top_k: int):
+    """x: (..., D) -> (weights, idx, probs): top-k renormalized weights."""
+    e_pad = params["router"]["w"].shape[0]
+    logits = linear.apply(params["router"], x.astype(jnp.float32))
+    if e_pad > n_experts:  # mask padded experts
+        pad_mask = jnp.arange(e_pad) >= n_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    weights = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return weights, idx, probs
+
+
+def _dispatch_combine(xc, weights, idx, e_pad: int, top_k: int, capacity: int):
+    """One chunk: xc (B, Sc, D); returns (expert_in (B,E,C,D), combine (B,Sc,E,C))."""
+    # position of each (token, slot) within its expert, per batch row.
+    oh = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32)       # (B,Sc,k,E)
+    # sequentialize the k slots: slot j sees counts from slots < j.
+    pos = jnp.cumsum(oh.reshape(oh.shape[0], -1, e_pad), axis=1).reshape(oh.shape) - oh
+    pos = jnp.einsum("bske->bsk", pos * oh)                   # (B,Sc,k) position
+    keep = pos < capacity
+    w = weights * keep                                        # dropped -> 0
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    # combine[b,s,e,c] = sum_j w[b,s,j] * oh[b,s,j,e] * cap_oh[b,s,j,c]
+    combine = jnp.einsum("bsk,bske,bskc->bsec", w, oh, cap_oh)
+    dispatch = (combine > 0).astype(xc.dtype)
+    expert_in = jnp.einsum("bsec,bsd->becd", dispatch, xc)
+    return expert_in, combine.astype(xc.dtype)
+
+
+def _expert_ffn(experts, x, act: str):
+    """Expert FFN with an EXPLICIT expert axis (no vmap): every intermediate
+    carries E so sharding constraints can anchor EP end-to-end (a vmapped
+    body hides the E axis from with_sharding_constraint — §Perf B2).
+
+    x: (B, E, C, D).  DYAD experts use the mixed-variant fused form
+    (up=IT, down=OT, block-layout hidden) — see DESIGN §7."""
+    up = experts["up"]
+    if "w1" in up:                                   # dyad experts
+        n, d_out, d_in = up["w1"].shape[1:]
+
+        def dyad_up(p):
+            lead = x.shape[:-1]
+            x1 = x.reshape(*lead, n, d_in)
+            x2 = jnp.swapaxes(x.reshape(*lead, d_in, n), -1, -2)
+            return (jnp.einsum("becgi,egoi->becgo", x1, p["w1"].astype(x.dtype))
+                    + jnp.einsum("becgi,egoi->becgo", x2,
+                                 p["w2"].astype(x.dtype)))
+
+        if act == "swiglu":
+            h = jax.nn.silu(dyad_up(experts["gate"])) * dyad_up(up)
+        else:
+            h = getattr(jax.nn, act if act != "gelu" else "gelu")(dyad_up(up))
+        h = shard_ctx.constrain_expert_batch(h)       # (B,E,C,n,d_out)
+        dn = experts["down"]
+        z1 = jnp.einsum("becgi,egoi->becgo", h, dn["w1"].astype(x.dtype))
+        z2 = jnp.einsum("becgi,egoi->becgo", h, dn["w2"].astype(x.dtype))
+        nd, d2 = z1.shape[-2], z1.shape[-1]
+        y = (z1.reshape(*z1.shape[:-2], nd * d2)
+             + jnp.swapaxes(z2, -1, -2).reshape(*z2.shape[:-2], nd * d2))
+        return y
+
+    # dense experts: (E, f_out, f_in) weights
+    if act == "swiglu":
+        g = jnp.einsum("becd,efd->becf", x, experts["gate"]["w"].astype(x.dtype))
+        u = jnp.einsum("becd,efd->becf", x, up["w"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        fn = {"gelu": jax.nn.gelu, "relu": jax.nn.relu}[act]
+        h = fn(jnp.einsum("becd,efd->becf", x, up["w"].astype(x.dtype)))
+    h = shard_ctx.constrain_expert_batch(h)
+    return jnp.einsum("becf,edf->becd", h, experts["down"]["w"].astype(x.dtype))
+
+
+def apply_moe(
+    params,
+    x,
+    lin_cfg: factory.LinearCfg,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    act: str = "swiglu",
+    chunk: Optional[int] = None,
+):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    e_pad = params["router"]["w"].shape[0]
+    weights, idx, probs = _route(params, x, n_experts, top_k)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    fe = jnp.mean(
+        jax.nn.one_hot(idx, e_pad, dtype=jnp.float32).sum(-2), axis=(0, 1))
+    aux = n_experts * jnp.sum(me * fe) / top_k
+
+    Sc = min(chunk or S, S)
+    assert S % Sc == 0, f"seq {S} must divide moe chunk {Sc}"
+    capacity = max(1, int(Sc * top_k * capacity_factor / n_experts))
+
+    def run_chunk(xc, wc, ic):
+        expert_in, combine = _dispatch_combine(xc, wc, ic, e_pad, top_k, capacity)
+        expert_in = shard_ctx.constrain_expert_batch(expert_in)
+        eo = _expert_ffn(params["experts"], expert_in, act)
+        eo = shard_ctx.constrain_expert_batch(eo)
+        return jnp.einsum("bsec,becd->bsd", combine, eo)
+
+    if Sc == S:
+        y = run_chunk(x, weights, idx)
+    else:
+        ns = S // Sc
+        xs = (
+            x.reshape(B, ns, Sc, D).swapaxes(0, 1),
+            weights.reshape(B, ns, Sc, -1).swapaxes(0, 1),
+            idx.reshape(B, ns, Sc, -1).swapaxes(0, 1),
+        )
+        _, ys = jax.lax.scan(lambda c, t: (c, run_chunk(*t)), None, xs)
+        y = ys.swapaxes(0, 1).reshape(B, S, D)
+
+    if "shared" in params:
+        g = jax.nn.sigmoid(
+            linear.apply(params["shared_gate"], x.astype(jnp.float32)))
+        y = y + g.astype(x.dtype) * mlp_lib.apply_mlp(
+            params["shared"], x, lin_cfg, act=act)
+    return y, aux

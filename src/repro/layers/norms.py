@@ -1,0 +1,37 @@
+"""Normalization layers.
+
+Mixed-precision discipline: REDUCTIONS accumulate in fp32 (the (B,S,1)
+statistics), but the big (B,S,D) elementwise math stays in the activation
+dtype — fp32-internal norms would push fp32 cotangents through the whole
+backward pass, doubling HBM traffic and collective bytes (EXPERIMENTS §Perf
+iteration A2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    # fp32 for the row statistics only; (B,S,D) math in activation dtype.
+    # (A hand-written VJP was tried and REFUTED: it blocked XLA fusion and
+    # INCREASED modeled HBM traffic — EXPERIMENTS §Perf A3.)
+    var = jnp.mean(jnp.square(x).astype(jnp.float32), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = (x - mu.astype(x.dtype)) * inv
+    return y * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)

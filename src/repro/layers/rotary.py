@@ -1,0 +1,26 @@
+"""Rotary position embeddings (RoPE), supporting arbitrary position offsets
+(required for single-token decode against a long KV cache)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies, fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S).
+
+    Angles are computed in fp32 (positions can exceed bf16 range); the big
+    (..., S, H, hd) rotation math stays in the activation dtype."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv     # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)         # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Training/prefill uses the chunked dual form: quadratic attention-like compute
+inside chunks of length ``chunk`` plus a cheap sequential inter-chunk state
+recurrence (``lax.scan`` over ``S/chunk`` steps, state ``(B,H,P,N)``).
+Decode is the O(1) recurrent update.  The large in/out projections go through
+the linear factory with ``site="ssm"`` — the DYAD substitution point for
+attention-free architectures (see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factory, linear
+from repro.layers import norms
+
+
+def init_ssm(
+    key,
+    d_model: int,
+    lin_cfg: factory.LinearCfg,
+    *,
+    d_state: int = 128,
+    head_dim: int = 64,
+    expand: int = 2,
+    n_groups: int = 1,
+    conv_width: int = 4,
+    dtype=jnp.float32,
+):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 7)
+    p = {
+        "wz": factory.init(ks[0], d_model, d_inner, lin_cfg, site="ssm",
+                           bias=False, dtype=dtype),
+        "wx": factory.init(ks[1], d_model, d_inner, lin_cfg, site="ssm",
+                           bias=False, dtype=dtype),
+        "wbc": linear.init(ks[2], d_model, 2 * n_groups * d_state, bias=False,
+                           dtype=dtype),
+        "wdt": linear.init(ks[3], d_model, n_heads, bias=False, dtype=dtype),
+        "wo": factory.init(ks[4], d_inner, d_model, lin_cfg, site="ssm",
+                           bias=False, dtype=dtype),
+        "conv": jax.random.normal(ks[5], (conv_width, conv_ch), dtype) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(dtype)),
+        "D": jnp.ones((n_heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (n_heads,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))).astype(dtype),
+        "norm": norms.init_rmsnorm(d_inner, dtype),
+    }
+    return p
+
+
+def _segsum(x):
+    """x: (..., L) -> (..., L, L): T[i,j] = sum_{k=j+1..i} x[k] (i>=j), -inf else."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(u, kernel):
+    """Depthwise causal conv: u (B,S,Ch), kernel (W,Ch)."""
+    W = kernel.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for w in range(W):
+        out = out + up[:, w:w + u.shape[1], :] * kernel[w]
+    return out
+
+
+def _project(params, x, lin_cfg, n_groups, d_state, n_heads, head_dim):
+    """Shared projection math for both forms."""
+    z = factory.apply(params["wz"], x, lin_cfg, site="ssm")
+    xs = factory.apply(params["wx"], x, lin_cfg, site="ssm")
+    bc = linear.apply(params["wbc"], x)
+    dt = linear.apply(params["wdt"], x)
+    return z, xs, bc, dt
+
+
+def apply_ssm(params, x, lin_cfg, *, d_state=128, head_dim=64, n_groups=1,
+              chunk=256):
+    """Chunked SSD forward.  x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    z, xs, bc, dt = _project(params, x, lin_cfg, n_groups, d_state, n_heads,
+                             head_dim)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv"].astype(x.dtype)))
+    xs, bmat, cmat = jnp.split(
+        conv_out, [d_inner, d_inner + n_groups * d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
+    xh = xs.reshape(B, S, n_heads, head_dim).astype(jnp.float32)
+    bmat = bmat.reshape(B, S, n_groups, d_state).astype(jnp.float32)
+    cmat = cmat.reshape(B, S, n_groups, d_state).astype(jnp.float32)
+    # broadcast groups over heads
+    rep = n_heads // n_groups
+    bh = jnp.repeat(bmat, rep, axis=2)                              # (B,S,H,N)
+    ch = jnp.repeat(cmat, rep, axis=2)
+
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} must divide ssd chunk {L}"
+    nc = S // L
+    r = lambda t: t.reshape(B, nc, L, *t.shape[2:])
+    xh, bh, ch, dt = r(xh), r(bh), r(ch), r(dt)
+
+    dA = dt * A                                                     # (B,nc,L,H)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1) intra-chunk (quadratic within chunk)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))               # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcsh,bcshp->bclhp",
+                        ch, bh, Lmat, dt, xh)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)             # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, decay_states * dt, xh)
+
+    # 3) inter-chunk recurrence (sequential over nc; state (B,H,P,N))
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                       # (B,nc,H)
+
+    def step(s_prev, inp):
+        dec, st = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((B, n_heads, head_dim, d_state), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                        # (B,nc,H,P,N)
+
+    # 4) state contribution to outputs
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", ch, prev_states,
+                       jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(B, S, n_heads, head_dim)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.reshape(B, S, n_heads,
+                                                                  head_dim)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = norms.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return factory.apply(params["wo"], y, lin_cfg, site="ssm")
+
+
+def init_ssm_cache(batch, d_model, *, d_state=128, head_dim=64, expand=2,
+                   n_groups=1, conv_width=4, n_heads=None, dtype=jnp.float32):
+    d_inner = expand * d_model
+    h = n_heads or d_inner // head_dim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, head_dim, d_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(params, x, cache, lin_cfg, *, d_state=128, head_dim=64,
+                    n_groups=1):
+    """One-token recurrent update.  x: (B, 1, D) -> (y (B,1,D), new cache)."""
+    B = x.shape[0]
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    z, xs, bc, dt = _project(params, x, lin_cfg, n_groups, d_state, n_heads,
+                             head_dim)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)[:, 0]              # (B,Ch)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    kernel = params["conv"].astype(x.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, kernel))
+    new_conv = hist[:, 1:]
+    xs, bmat, cmat = jnp.split(
+        conv_out, [d_inner, d_inner + n_groups * d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))     # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B, n_heads, head_dim).astype(jnp.float32)
+    rep = n_heads // n_groups
+    bh = jnp.repeat(bmat.reshape(B, n_groups, d_state), rep, 1)
+    chh = jnp.repeat(cmat.reshape(B, n_groups, d_state), rep, 1)
+
+    decay = jnp.exp(dt * A)                                         # (B,H)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, chh)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = norms.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = factory.apply(params["wo"], y, lin_cfg, site="ssm")
+    return out, {"conv": new_conv, "state": state}

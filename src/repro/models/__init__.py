@@ -1,0 +1,3 @@
+"""Model families (lm / moe / encdec / ssm / vlm / hybrid), scan-over-layers."""
+from repro.models.config import ModelCfg  # noqa: F401
+from repro.models import blocks, model  # noqa: F401

@@ -1,0 +1,197 @@
+"""Per-layer blocks for every model family.
+
+Each family uses ONE homogeneous block kind so the whole stack can be
+``jax.lax.scan``-ed over stacked layer params (keeps compiled HLO size O(1) in
+depth — required to compile 126-layer models, and the idiomatic TPU pattern).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import mlp as mlp_lib
+from repro.layers import moe as moe_lib
+from repro.layers import norms
+from repro.layers import ssm as ssm_lib
+from repro.models.config import ModelCfg
+from repro.sharding import ctx as shard_ctx
+
+
+def _init_norm(cfg: ModelCfg, dtype):
+    if cfg.norm == "layernorm":
+        return norms.init_layernorm(cfg.d_model, dtype)
+    return norms.init_rmsnorm(cfg.d_model, dtype)
+
+
+def _apply_norm(cfg: ModelCfg, p, x):
+    if cfg.norm == "layernorm":
+        return norms.layernorm(p, x)
+    return norms.rmsnorm(p, x)
+
+
+def init_block(key, cfg: ModelCfg, kind: str):
+    """kind: lm | moe | ssm | hybrid | enc | dec_cross."""
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 6)
+    p = {"norm1": _init_norm(cfg, dtype)}
+    if kind in ("lm", "moe", "hybrid", "enc", "dec_cross"):
+        p["attn"] = attn_lib.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.linear,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype)
+    if kind in ("ssm", "hybrid"):
+        skey = ks[1] if kind == "hybrid" else ks[0]
+        p["ssm"] = ssm_lib.init_ssm(
+            skey, cfg.d_model, cfg.linear, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            n_groups=cfg.ssm_groups, conv_width=cfg.conv_width, dtype=dtype)
+    if kind == "hybrid":
+        p["bnorm_a"] = norms.init_rmsnorm(cfg.d_model, dtype)
+        p["bnorm_s"] = norms.init_rmsnorm(cfg.d_model, dtype)
+    if kind == "dec_cross":
+        p["xnorm"] = _init_norm(cfg, dtype)
+        p["xattn"] = attn_lib.init_attention(
+            ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.linear,
+            qkv_bias=cfg.qkv_bias, qk_norm=False, dtype=dtype)
+    if kind != "ssm":
+        p["norm2"] = _init_norm(cfg, dtype)
+        if kind == "moe":
+            p["moe"] = moe_lib.init_moe(
+                ks[3], cfg.d_model, cfg.expert_d_ff, cfg.n_experts, cfg.top_k,
+                cfg.linear, n_shared=cfg.n_shared, act=cfg.act,
+                n_experts_padded=cfg.e_pad, dtype=dtype)
+        else:
+            p["mlp"] = mlp_lib.init_mlp(
+                ks[3], cfg.d_model, cfg.d_ff, cfg.linear, act=cfg.act,
+                bias=cfg.mlp_bias, dtype=dtype)
+    return p
+
+
+def _self_attn(p, cfg: ModelCfg, x, *, causal, cache, positions):
+    return attn_lib.attention(
+        p, x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        lin_cfg=cfg.linear,
+        rope_theta=cfg.rope_theta if cfg.pos_embed == "rope" else None,
+        positions=positions, causal=causal, window=cfg.window,
+        chunk=cfg.attn_chunk, cache=cache)
+
+
+def apply_block(
+    params,
+    x,
+    cfg: ModelCfg,
+    kind: str,
+    *,
+    cache=None,
+    enc_out=None,
+    positions=None,
+):
+    """Returns (x, new_cache, aux)."""
+    new_cache = {} if cache is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    causal = kind != "enc"
+
+    x = shard_ctx.constrain_residual(x)
+    h = _apply_norm(cfg, params["norm1"], x)
+    if kind == "hybrid":
+        a, kv = _self_attn(params["attn"], cfg, h, causal=True,
+                           cache=cache.get("kv") if cache else None,
+                           positions=positions)
+        if cache is not None:
+            s, sc = ssm_lib.ssm_decode_step(
+                params["ssm"], h, cache["ssm"], cfg.linear,
+                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                n_groups=cfg.ssm_groups)
+            new_cache = {"kv": kv, "ssm": sc}
+        else:
+            s = ssm_lib.apply_ssm(
+                params["ssm"], h, cfg.linear, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+                chunk=cfg.ssd_chunk)
+        # parallel heads, per-branch output norm, averaged (hymba-style)
+        x = x + 0.5 * (norms.rmsnorm(params["bnorm_a"], a) +
+                       norms.rmsnorm(params["bnorm_s"], s))
+    elif kind == "ssm":
+        if cache is not None:
+            s, sc = ssm_lib.ssm_decode_step(
+                params["ssm"], h, cache["ssm"], cfg.linear,
+                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                n_groups=cfg.ssm_groups)
+            new_cache = {"ssm": sc}
+        else:
+            s = ssm_lib.apply_ssm(
+                params["ssm"], h, cfg.linear, d_state=cfg.ssm_state,
+                head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+                chunk=cfg.ssd_chunk)
+        return x + s, new_cache, aux
+    else:
+        a, kv = _self_attn(params["attn"], cfg, h, causal=causal,
+                           cache=cache.get("kv") if cache else None,
+                           positions=positions)
+        if cache is not None:
+            new_cache["kv"] = kv
+        x = x + a
+
+    if kind == "dec_cross":
+        h = _apply_norm(cfg, params["xnorm"], x)
+        if cache is not None and "xk" in cache:
+            # cross K/V precomputed at prefill; attend directly.
+            xa = _cross_from_cache(params["xattn"], cfg, h, cache)
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        else:
+            xa, _ = attn_lib.attention(
+                params["xattn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.hd, lin_cfg=cfg.linear, rope_theta=None,
+                positions=jnp.arange(h.shape[1]), causal=False,
+                kv_input=enc_out)
+        x = x + xa
+
+    h = _apply_norm(cfg, params["norm2"], x)
+    if kind == "moe":
+        m, aux = moe_lib.apply_moe(
+            params["moe"], h, cfg.linear, n_experts=cfg.n_experts,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act,
+            chunk=cfg.moe_chunk)
+    else:
+        m = mlp_lib.apply_mlp(params["mlp"], h, cfg.linear, act=cfg.act)
+    return x + m, new_cache, aux
+
+
+def _cross_from_cache(p, cfg: ModelCfg, q_in, cache):
+    """Cross-attention against precomputed encoder K/V (decode path)."""
+    from repro.core import factory
+    B, S, _ = q_in.shape
+    K, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    q = factory.apply(p["wq"], q_in, cfg.linear, site="attn").reshape(
+        B, S, cfg.n_heads, cfg.hd)
+    if "q_norm" in p:
+        q = norms.rmsnorm(p["q_norm"], q)
+    qg = q.reshape(B, S, K, G, cfg.hd)
+    T = cache["xk"].shape[1]
+    o = attn_lib._naive_sdpa(qg, cache["xk"], cache["xv"],
+                             jnp.zeros((S,), jnp.int32),
+                             jnp.arange(T), False, None)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return factory.apply(p["wo"], o, cfg.linear, site="attn")
+
+
+def init_block_cache(cfg: ModelCfg, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    """Cache pytree for ONE block (stacked over layers by the model)."""
+    c = {}
+    if kind in ("lm", "moe", "hybrid", "dec_cross"):
+        # ring buffer when sliding-window attention bounds the reach
+        L = min(max_len, cfg.window) if cfg.window else max_len
+        c["kv"] = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.hd, dtype)
+    if kind in ("ssm", "hybrid"):
+        c["ssm"] = ssm_lib.init_ssm_cache(
+            batch, cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            n_groups=cfg.ssm_groups, conv_width=cfg.conv_width,
+            dtype=cfg.cdtype)
+    if kind == "dec_cross":
+        c["xk"] = jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd), dtype)
+    return c

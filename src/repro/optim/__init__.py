@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+from repro.optim.adamw import AdamW, global_norm  # noqa: F401
+from repro.optim.compress import Compressor, compressed_psum  # noqa: F401
+from repro.optim import schedule  # noqa: F401

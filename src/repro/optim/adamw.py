@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay, decay masking and configurable moment
+dtype (bf16 moments = ZeRO-friendly memory for 100B+ params; see DESIGN §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def default_decay_mask(path, leaf) -> bool:
+    """Decay matrices only (>=2D); skip norms, biases, scalars."""
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    if leaf.ndim < 2:
+        return False
+    return not any(s in name for s in ("norm", "scale", "A_log", "dt_bias"))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray]    # step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+    # fp32 master copy: params (and their collectives) stay bf16 while the
+    # update path accumulates in fp32 — the standard mixed-precision recipe.
+    master: bool = False
+
+    def init(self, params):
+        md = jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+        z = lambda p: jnp.zeros(p.shape, md)
+        st = {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.master:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step)
+
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        else:
+            gnorm = global_norm(grads)
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        base = state.get("master", params)
+
+        def upd(path, p, base_p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = (m_new / c1) / (jnp.sqrt(v_new / c2) + self.eps)
+            if self.weight_decay and default_decay_mask(path, p):
+                u = u + self.weight_decay * base_p.astype(jnp.float32)
+            p_new = base_p.astype(jnp.float32) - lr * u
+            return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                    v_new.astype(v.dtype), p_new)
+
+        out = jax.tree_util.tree_map_with_path(upd, params, base, grads,
+                                               state["m"], state["v"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        new_params = pick(0)
+        new_state = {"m": pick(1), "v": pick(2), "step": step}
+        if self.master:
+            new_state["master"] = pick(3)
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)))

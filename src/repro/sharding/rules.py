@@ -1,0 +1,200 @@
+"""Sharding rules: key-path -> PartitionSpec for params, optimizer state,
+batches and caches.  DP/FSDP/TP/EP composition per DESIGN §5.
+
+TP (Megatron column/row) on the ``model`` axis:
+  * up-type projections (wq/wk/wv, gate/up, wz/wx) shard the OUTPUT features;
+  * down-type projections (wo, down) shard the INPUT (contracting) features —
+    GSPMD inserts the single all-reduce per block;
+  * DYAD 3-D weights ``(n_dyad, d_out, d_in)`` shard d_out (up) / d_in (down):
+    identical collective count to dense TP, n_dyad/2 x fewer weight bytes;
+  * MoE experts shard the leading expert axis (EP);
+  * embedding/unembedding tables shard the vocab axis.
+
+FSDP (ZeRO) on the ``fsdp`` axes shards the remaining major dim of big leaves;
+optimizer moments follow their parameters (ZeRO-1 falls out of GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+UP_NAMES = ("wq", "wk", "wv", "gate", "up", "wz", "wx")
+DOWN_NAMES = ("wo", "down")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    model: str = "model"
+    dp: Tuple[str, ...] = ("data",)          # batch axes (pod+data when multi)
+    fsdp: Optional[Tuple[str, ...]] = None   # param/optimizer ZeRO axes
+    shard_experts: bool = True
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+    @property
+    def fsdp_spec(self):
+        if not self.fsdp:
+            return None
+        return self.fsdp if len(self.fsdp) > 1 else self.fsdp[0]
+
+
+def _path_parts(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def _axes_size(axes, axis_sizes) -> int:
+    if axes is None or axis_sizes is None:
+        return 1
+    if isinstance(axes, str):
+        return axis_sizes.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= axis_sizes.get(a, 1)
+    return n
+
+
+def _guard(spec: list, shape, axis_sizes) -> list:
+    """Drop axis placements whose dimension is not divisible (e.g. odd
+    vocabs like whisper's 51865) — fall back to replication for that dim."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        n = _axes_size(axes, axis_sizes)
+        out.append(axes if (n <= 1 or dim % n == 0) else None)
+    return out
+
+
+def param_spec(path, leaf, rules: MeshRules, axis_sizes=None) -> P:
+    parts = _path_parts(path)
+    name = "/".join(parts)
+    # layer params are stacked on a leading n_layers axis
+    stacked = "layers" in parts or "enc_layers" in parts
+    shape = leaf.shape[1:] if stacked else leaf.shape
+    ndim = len(shape)
+    m, f = rules.model, rules.fsdp_spec
+
+    def done(spec):
+        spec = _guard(spec, shape, axis_sizes)
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    # anything tiny or <=1-D: replicate (biases, norms, scalars, A_log, ...)
+    if ndim <= 1:
+        return done([None] * ndim)
+    if ("router" in name or "shared_gate" in name or parts[-1] == "conv"
+            or "frontend" in name):
+        return done([None] * ndim)
+
+    is_expert = "experts" in parts
+    parent = next((p for p in reversed(parts)
+                   if p in UP_NAMES + DOWN_NAMES), None)
+    is_dyad = parts[-1] in ("w1", "w2")
+
+    if parts[-1] == "table":
+        # (vocab, d_model): vocab over model (Megatron), d over fsdp
+        return done([m, f])
+
+    if is_expert:
+        # leading expert axis over model (EP); inner dims over fsdp
+        if not rules.shard_experts:
+            return done([None] * ndim)
+        if is_dyad:          # (E, n_dyad, d_out, d_in)
+            return done([m, None, f, None])
+        if ndim == 3:        # (E, f_out, f_in) dense expert
+            return done([m, f, None])
+        return done([m] + [None] * (ndim - 1))
+
+    if is_dyad:              # (n_dyad, d_out, d_in)
+        if parent in DOWN_NAMES:
+            return done([None, f, m])
+        return done([None, m, f])
+
+    if ndim == 2:            # dense (f_out, f_in)
+        if parent in DOWN_NAMES:
+            return done([f, m])
+        if parent in UP_NAMES:
+            return done([m, f])
+        return done([None, None])
+    return done([None] * ndim)
+
+
+def state_shardings(mesh, state_specs, rules: MeshRules):
+    """NamedShardings for a train state {params, opt{m,v,step}, ...}."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def shard_params(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(mesh, param_spec(p, l, rules, sizes)),
+            tree)
+
+    out = {"params": shard_params(state_specs["params"])}
+    if "opt" in state_specs:
+        out["opt"] = {
+            "m": shard_params(state_specs["opt"]["m"]),
+            "v": shard_params(state_specs["opt"]["v"]),
+            "step": NamedSharding(mesh, P()),
+        }
+        if "master" in state_specs["opt"]:
+            out["opt"]["master"] = shard_params(state_specs["opt"]["master"])
+    if "compress" in state_specs:
+        out["compress"] = {"err": shard_params(state_specs["compress"]["err"])}
+    return out
+
+
+def batch_shardings(mesh, batch_specs, rules: MeshRules):
+    """Batch axis over the DP axes, everything else replicated."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf):
+        spec = [rules.dp_spec] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*_guard(spec, leaf.shape, sizes)))
+    return jax.tree_util.tree_map_with_path(one, batch_specs)
+
+
+def cache_shardings(mesh, cache_specs, rules: MeshRules):
+    """KV/SSM caches: batch over DP, kv-heads over model where divisible."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = mesh.shape[rules.model]
+
+    def one(path, leaf):
+        parts = _path_parts(path)
+        nd = len(leaf.shape)
+        if nd == 0 or parts[-1] == "idx":
+            return NamedSharding(mesh, P())
+        # leading axis is n_layers (stacked), second is batch
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = rules.dp_spec
+        leafname = parts[-1]
+        if leafname in ("k", "v", "xk", "xv") and nd == 5:
+            # (L, B, T, K, hd): kv heads over model when divisible, else
+            # context-parallel cache (T over model) — never replicate a
+            # multi-GB cache across the model axis.
+            if leaf.shape[3] % msize == 0:
+                spec[3] = rules.model
+            elif leaf.shape[2] % msize == 0:
+                spec[2] = rules.model
+        if leafname == "state" and nd == 5:
+            # (L, B, H, P, N): ssm heads over model when divisible
+            if leaf.shape[2] % msize == 0:
+                spec[2] = rules.model
+        return NamedSharding(mesh, P(*_guard(spec, leaf.shape, sizes)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def replicated(mesh, tree_specs):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_specs)

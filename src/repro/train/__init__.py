@@ -1,0 +1,3 @@
+"""Training loop substrate."""
+from repro.train.loop import Trainer  # noqa: F401
+from repro.train.step import init_train_state, make_eval_step, make_train_step  # noqa: F401

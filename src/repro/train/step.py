@@ -1,0 +1,80 @@
+"""Train/eval steps: value_and_grad + microbatch accumulation + optimizer.
+
+The returned step function is pure (state, batch) -> (state, metrics) and is
+what the launcher jits with in/out shardings — the SAME function serves the
+single-host tests and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelCfg
+from repro.optim.adamw import AdamW
+from repro.optim.compress import Compressor
+
+
+def init_train_state(cfg: ModelCfg, opt: AdamW, key,
+                     compressor: Optional[Compressor] = None) -> dict:
+    params = model.init_params(cfg, key)
+    state = {"params": params, "opt": opt.init(params)}
+    if compressor is not None and compressor.codec != "none":
+        state["compress"] = compressor.init(params)
+    return state
+
+
+def make_train_step(cfg: ModelCfg, opt: AdamW,
+                    compressor: Optional[Compressor] = None):
+    accum = max(cfg.grad_accum, 1)
+
+    def loss_of(params, batch):
+        return model.loss_fn(cfg, params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                # micro-batch-major layout: each device keeps its LOCAL batch
+                # shard across ALL accumulation steps (the naive
+                # reshape(accum, B//accum) would partition the scan axis
+                # across data-parallel devices).
+                return x.reshape(x.shape[0] // accum, accum,
+                                 *x.shape[1:]).swapaxes(0, 1)
+            micro = jax.tree.map(split, batch)
+
+            def mb(carry, b):
+                (_, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                gsum = jax.tree.map(jnp.add, carry[0], g)
+                msum = jax.tree.map(jnp.add, carry[1], m)
+                return (gsum, msum), None
+
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            zero_m = {"loss": jnp.zeros(()), "aux": jnp.zeros(()),
+                      "ppl_proxy": jnp.zeros(())}
+            (grads, msum), _ = jax.lax.scan(mb, (zero_g, zero_m), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m / accum, msum)
+
+        new_state = dict(state)
+        if "compress" in state and compressor is not None:
+            grads, new_state["compress"] = compressor.compress_decompress(
+                grads, state["compress"])
+        new_params, new_opt, om = opt.update(grads, state["opt"], params)
+        new_state["params"], new_state["opt"] = new_params, new_opt
+        metrics = dict(metrics, **om)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelCfg):
+    def eval_step(params, batch):
+        _, metrics = model.loss_fn(cfg, params, batch)
+        return metrics
+    return eval_step

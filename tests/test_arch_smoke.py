@@ -1,0 +1,115 @@
+"""REQUIRED per-arch smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs (the full configs
+are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.optim import AdamW, schedule
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+OPT = AdamW(lr=schedule.constant(1e-3))
+
+
+def _batch(cfg, B=2, S=16):
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+         "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["patches"] = jax.random.normal(
+            KEY, (B, cfg.n_patches, cfg.frontend_dim))
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(
+            KEY, (B, cfg.n_frames, cfg.frontend_dim))
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS + configs.PAPER_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get(arch, smoke=True)
+    batch = _batch(cfg)
+    state = init_train_state(cfg, OPT, KEY)
+
+    logits, aux = model.forward(cfg, state["params"], batch)
+    S_text = batch["tokens"].shape[1]
+    assert logits.shape == (2, S_text, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN/inf logits"
+
+    step = jax.jit(make_train_step(cfg, OPT))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: NaN loss"
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved, f"{arch}: no parameter update"
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get(arch, smoke=True)
+    state_params = model.init_params(cfg, KEY)
+    cache = model.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(KEY, (2, cfg.n_frames, cfg.frontend_dim))
+        cache = model.prefill_cross(cfg, state_params, cache, frames)
+    tok = jax.random.randint(KEY, (2, 1), 0, cfg.vocab_size)
+    logits, new_cache = model.decode_step(cfg, state_params, cache, tok)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "mamba2_780m", "hymba_1_5b"])
+def test_smoke_dense_vs_dyad_both_run(arch):
+    """The drop-in claim: same arch runs with dense and every dyad variant."""
+    for lin in ["dense", "dyad_it_4", "dyad_ot_4", "dyad_dt_4", "dyad_it_8",
+                "dyad_it_4_cat"]:
+        cfg = configs.get(arch, smoke=True, linear=configs.linear_cfg(lin))
+        params = model.init_params(cfg, KEY)
+        logits, _ = model.forward(cfg, params, _batch(cfg))
+        assert np.isfinite(np.asarray(logits)).all(), f"{arch}/{lin}"
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact published numbers from the assignment table."""
+    c = configs.get("qwen3_0_6b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 1024, 16, 8, 3072, 151936)
+    assert c.qk_norm
+    c = configs.get("llama3_405b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (126, 16384, 128, 8, 53248, 128256)
+    c = configs.get("qwen2_moe_a2_7b")
+    assert (c.n_experts, c.top_k, c.expert_d_ff, c.n_shared) == (60, 4, 1408, 4)
+    c = configs.get("llama4_maverick_400b_a17b")
+    assert (c.n_experts, c.top_k) == (128, 1)
+    c = configs.get("mamba2_780m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1536, 128)
+    c = configs.get("hymba_1_5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.ssm_state) == (32, 1600, 25, 5, 5504, 16)
+    c = configs.get("whisper_medium")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.vocab_size) == (
+        24, 24, 1024, 51865)
+    c = configs.get("phi3_vision_4_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == (
+        32, 3072, 32, 8192, 32064)
+    c = configs.get("phi3_medium_14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == (
+        40, 5120, 40, 10, 17920)
+    c = configs.get("qwen2_5_32b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        64, 5120, 27648, 152064)
+    assert c.qkv_bias
+
+
+def test_long_500k_applicability_rule():
+    shape = configs.SHAPES["long_500k"]
+    runnable = [a for a in configs.ARCHS
+                if configs.cell_runnable(configs.get(a), shape)[0]]
+    assert sorted(runnable) == ["hymba_1_5b", "mamba2_780m"]

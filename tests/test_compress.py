@@ -1,0 +1,59 @@
+"""Gradient compression: codecs, error feedback, convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import AdamW, Compressor, schedule
+
+
+def test_int8_roundtrip_accuracy():
+    c = Compressor(codec="int8")
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    st = c.init(g)
+    dec, st = c.compress_decompress(g, st)
+    err = np.abs(np.asarray(dec["w"]) - np.asarray(g["w"])).max()
+    scale = float(jnp.abs(g["w"]).max()) / 127
+    assert err <= scale * 0.51 + 1e-6
+
+
+def test_error_feedback_conserves_gradient_mass():
+    """The error-feedback invariant: sum of decoded gradients + residual
+    error == sum of true gradients, EXACTLY (nothing is ever lost)."""
+    c = Compressor(codec="topk", topk_frac=0.25)
+    g = {"w": jnp.asarray([1.0, 0.1, 0.01, 0.001])}
+    st = c.init(g)
+    T = 40
+    total = np.zeros(4)
+    for _ in range(T):
+        dec, st = c.compress_decompress(g, st)
+        total += np.asarray(dec["w"])
+    np.testing.assert_allclose(total + np.asarray(st["err"]["w"]),
+                               T * np.asarray(g["w"]), rtol=1e-5, atol=1e-5)
+    # the dominant element flushes nearly every round (it loses the top-1
+    # slot only on rounds where another element's accumulated error wins)
+    assert 0.9 <= total[0] / T <= 1.0 + 1e-6
+
+
+def test_compressed_training_converges():
+    """Quadratic bowl: int8-compressed Adam still converges."""
+    opt = AdamW(lr=schedule.constant(0.05), weight_decay=0.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    p = {"w": jnp.zeros(3)}
+    st = opt.init(p)
+    for codec in ("int8", "topk"):
+        c = Compressor(codec=codec, topk_frac=0.5)
+        cs = c.init(p)
+        p_run, st_run = p, st
+        for _ in range(200):
+            g = jax.grad(lambda q: ((q["w"] - target) ** 2).sum())(p_run)
+            g, cs = c.compress_decompress(g, cs)
+            p_run, st_run, _ = opt.update(g, st_run, p_run)
+        np.testing.assert_allclose(np.asarray(p_run["w"]), np.asarray(target),
+                                   atol=0.05)
+
+
+def test_none_codec_passthrough():
+    c = Compressor(codec="none")
+    g = {"w": jnp.ones(4)}
+    dec, st = c.compress_decompress(g, c.init(g))
+    np.testing.assert_array_equal(np.asarray(dec["w"]), np.ones(4))

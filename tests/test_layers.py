@@ -1,0 +1,158 @@
+"""Layer substrate: attention paths, MoE dispatch, Mamba2 SSD duality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import factory
+from repro.layers import attention as attn
+from repro.layers import moe, norms, ssm
+from repro.layers.rotary import apply_rope
+
+KEY = jax.random.PRNGKey(0)
+DENSE = factory.DENSE
+DYAD = factory.LinearCfg(impl="dyad", n_dyad=4, scope="all")
+
+
+@pytest.mark.parametrize("lc", [DENSE, DYAD], ids=["dense", "dyad"])
+def test_attention_chunked_equals_naive(lc):
+    p = attn.init_attention(KEY, 64, 8, 4, 16, lc, qk_norm=True, qkv_bias=True)
+    x = jax.random.normal(KEY, (2, 12, 64))
+    y, _ = attn.attention(p, x, n_heads=8, n_kv=4, head_dim=16, lin_cfg=lc)
+    y2, _ = attn.attention(p, x, n_heads=8, n_kv=4, head_dim=16, lin_cfg=lc,
+                           chunk=5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_attention_decode_matches_full(window):
+    p = attn.init_attention(KEY, 32, 4, 2, 8, DENSE)
+    x = jax.random.normal(KEY, (2, 10, 32))
+    y, _ = attn.attention(p, x, n_heads=4, n_kv=2, head_dim=8, lin_cfg=DENSE,
+                          window=window)
+    # ring cache sized to the window when windowed
+    L = window if window else 10
+    cache = attn.init_kv_cache(2, L, 2, 8, dtype=jnp.float32)
+    outs = []
+    for t in range(10):
+        o, cache = attn.attention(p, x[:, t:t + 1], n_heads=4, n_kv=2,
+                                  head_dim=8, lin_cfg=DENSE, window=window,
+                                  cache=cache)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_cross_attention_shapes():
+    p = attn.init_attention(KEY, 32, 4, 4, 8, DENSE)
+    x = jax.random.normal(KEY, (2, 6, 32))
+    enc = jax.random.normal(KEY, (2, 9, 32))
+    y, _ = attn.attention(p, x, n_heads=4, n_kv=4, head_dim=8, lin_cfg=DENSE,
+                          rope_theta=None, causal=False, kv_input=enc,
+                          positions=jnp.arange(6))
+    assert y.shape == (2, 6, 32)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE: q.k depends only on relative distance."""
+    q = jax.random.normal(KEY, (1, 4, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 16))
+    def score(offset):
+        qr = apply_rope(q, offset + jnp.arange(4))
+        kr = apply_rope(k, offset + jnp.arange(4))
+        return jnp.einsum("bshd,bthd->bhst", qr, kr)
+    np.testing.assert_allclose(np.asarray(score(0)), np.asarray(score(100)),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_routes_topk_and_balances():
+    mp = moe.init_moe(KEY, 32, 64, 6, 2, DENSE, n_experts_padded=8)
+    x = jax.random.normal(KEY, (4, 16, 32))
+    w, idx, probs = moe._route(mp, x, 6, 2)
+    assert idx.shape == (4, 16, 2)
+    assert int(idx.max()) < 6, "padded experts must never be routed to"
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    y, aux = moe.apply_moe(mp, x, DENSE, n_experts=6, top_k=2)
+    assert y.shape == x.shape and float(aux) >= 1.0 - 1e-3
+
+
+def test_moe_capacity_drops_tokens():
+    mp = moe.init_moe(KEY, 16, 32, 4, 1, DENSE)
+    x = jax.random.normal(KEY, (1, 8, 16))
+    y_small, _ = moe.apply_moe(mp, x, DENSE, n_experts=4, top_k=1,
+                               capacity_factor=0.25)
+    y_big, _ = moe.apply_moe(mp, x, DENSE, n_experts=4, top_k=1,
+                             capacity_factor=8.0)
+    assert not np.allclose(np.asarray(y_small), np.asarray(y_big))
+
+
+def test_moe_chunk_invariance_when_capacity_unbinding():
+    mp = moe.init_moe(KEY, 32, 64, 6, 2, DYAD, n_shared=1, n_experts_padded=8)
+    x = jax.random.normal(KEY, (2, 8, 32))
+    y, _ = moe.apply_moe(mp, x, DYAD, n_experts=6, top_k=2,
+                         capacity_factor=8.0)
+    y_c, _ = moe.apply_moe(mp, x, DYAD, n_experts=6, top_k=2,
+                           capacity_factor=8.0, chunk=4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_c), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("lc", [DENSE, DYAD], ids=["dense", "dyad"])
+def test_ssd_chunked_equals_recurrent(lc):
+    """The SSD dual form must equal the sequential recurrence — the
+    correctness heart of the Mamba2 implementation."""
+    sp = ssm.init_ssm(KEY, 32, lc, d_state=16, head_dim=8, expand=2)
+    x = jax.random.normal(KEY, (2, 8, 32)) * 0.5
+    y = ssm.apply_ssm(sp, x, lc, d_state=16, head_dim=8, chunk=4)
+    cache = ssm.init_ssm_cache(2, 32, d_state=16, head_dim=8, expand=2)
+    outs = []
+    for t in range(8):
+        o, cache = ssm.ssm_decode_step(sp, x[:, t:t + 1], cache, lc,
+                                       d_state=16, head_dim=8)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_ssd_chunk_size_invariance():
+    sp = ssm.init_ssm(KEY, 32, DENSE, d_state=16, head_dim=8)
+    x = jax.random.normal(KEY, (1, 12, 32)) * 0.5
+    y2 = ssm.apply_ssm(sp, x, DENSE, d_state=16, head_dim=8, chunk=2)
+    y6 = ssm.apply_ssm(sp, x, DENSE, d_state=16, head_dim=8, chunk=6)
+    y12 = ssm.apply_ssm(sp, x, DENSE, d_state=16, head_dim=8, chunk=12)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y6), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y12), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_norms_fp32_accumulation_dtype():
+    p = norms.init_rmsnorm(16)
+    x = jax.random.normal(KEY, (2, 16)).astype(jnp.bfloat16)
+    y = norms.rmsnorm(p, x)
+    assert y.dtype == jnp.bfloat16
+    p2 = norms.init_layernorm(16)
+    y2 = norms.layernorm(p2, x)
+    assert y2.dtype == jnp.bfloat16
+
+
+def test_fused_dyad_mlp_matches_variant_mix():
+    """Beyond-paper fused ff (up=IT, down=OT, 3-D hidden) must equal the
+    unfused mixed-variant computation exactly (paper Future Work §4.i)."""
+    from repro.core import dyad
+    from repro.layers import mlp as mlp_lib
+    lc = factory.LinearCfg(impl="dyad", n_dyad=4, variant="it", fuse_mlp=True)
+    p = mlp_lib.init_mlp(KEY, 32, 64, lc, act="swiglu")
+    x = jax.random.normal(KEY, (2, 5, 32))
+    y_fused = mlp_lib.apply_mlp(p, x, lc, act="swiglu")
+    spec_it = dyad.DyadSpec(n_dyad=4, variant="it")
+    spec_ot = dyad.DyadSpec(n_dyad=4, variant="ot")
+    h = (jax.nn.silu(dyad.apply(p["gate"], x, spec_it))
+         * dyad.apply(p["up"], x, spec_it))
+    y_ref = dyad.apply(p["down"], h, spec_ot)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)

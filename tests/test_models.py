@@ -1,0 +1,114 @@
+"""Model-level invariants across families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import factory
+from repro.models import model
+from repro.models.config import ModelCfg
+
+KEY = jax.random.PRNGKey(0)
+DYAD = factory.LinearCfg(impl="dyad", n_dyad=4, scope="ff")
+TINY = dict(n_layers=2, d_model=32, vocab_size=61, n_heads=4, n_kv_heads=2,
+            head_dim=8, d_ff=64, linear=DYAD)
+
+CFGS = [
+    ModelCfg(name="lm", family="lm", qk_norm=True, **TINY),
+    ModelCfg(name="ssm", family="ssm", ssm_state=16, ssm_head_dim=8,
+             ssd_chunk=4, pos_embed="none",
+             **{**TINY, "n_heads": 0, "n_kv_heads": 0, "d_ff": 0}),
+    ModelCfg(name="hyb", family="hybrid", ssm_state=16, ssm_head_dim=8,
+             ssd_chunk=4, window=4, **TINY),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_teacher_forced_equals_autoregressive(cfg):
+    p = model.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 8), 0, 61)
+    full, _ = model.forward(cfg, p, {"tokens": toks})
+    cache = model.init_cache(cfg, 2, 8, dtype=jnp.float32)
+    outs = []
+    for t in range(8):
+        lo, cache = model.decode_step(cfg, p, cache, toks[:, t:t + 1])
+        outs.append(lo)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=2e-3)
+
+
+def test_iota_embed_equals_take():
+    cfg = ModelCfg(name="a", family="lm", **TINY)
+    cfg_iota = cfg.replace(iota_embed=True)
+    p = model.init_params(cfg, KEY)
+    b = {"tokens": jax.random.randint(KEY, (2, 8), 0, 61)}
+    y1, _ = model.forward(cfg, p, b)
+    y2, _ = model.forward(cfg_iota, p, b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_remat_matches_no_remat():
+    cfg = ModelCfg(name="a", family="lm", **TINY)
+    p = model.init_params(cfg, KEY)
+    b = {"tokens": jax.random.randint(KEY, (2, 8), 0, 61),
+         "labels": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 61)}
+    g1 = jax.grad(lambda q: model.loss_fn(cfg, q, b)[0])(p)
+    g2 = jax.grad(
+        lambda q: model.loss_fn(cfg.replace(remat=True), q, b)[0])(p)
+    for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_label_masking():
+    cfg = ModelCfg(name="a", family="lm", **TINY)
+    p = model.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 8), 0, 61)
+    l_full, _ = model.loss_fn(cfg, p, {"tokens": toks, "labels": toks})
+    masked = toks.at[:, ::2].set(-1)
+    l_mask, m = model.loss_fn(cfg, p, {"tokens": toks, "labels": masked})
+    assert not np.isclose(float(l_full), float(l_mask))
+    assert np.isfinite(float(l_mask))
+
+
+def test_vlm_patch_positions_and_loss_alignment():
+    cfg = ModelCfg(name="v", family="vlm", n_patches=3, frontend_dim=12,
+                   **TINY)
+    p = model.init_params(cfg, KEY)
+    b = {"tokens": jax.random.randint(KEY, (2, 8), 0, 61),
+         "labels": jax.random.randint(KEY, (2, 8), 0, 61),
+         "patches": jax.random.normal(KEY, (2, 3, 12))}
+    logits, _ = model.forward(cfg, p, b)
+    assert logits.shape == (2, 8, 61)   # text positions only
+    loss, _ = model.loss_fn(cfg, p, b)
+    assert np.isfinite(float(loss))
+
+
+def test_encdec_cross_prefill_matches_forward():
+    cfg = ModelCfg(name="ed", family="encdec", n_enc_layers=2, n_frames=5,
+                   frontend_dim=12, norm="layernorm", act="gelu",
+                   pos_embed="learned", max_position=64, **TINY)
+    p = model.init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 6), 0, 61)
+    frames = jax.random.normal(KEY, (2, 5, 12))
+    full, _ = model.forward(cfg, p, {"tokens": toks, "frames": frames})
+    cache = model.init_cache(cfg, 2, 6, dtype=jnp.float32)
+    cache = model.prefill_cross(cfg, p, cache, frames)
+    outs = []
+    for t in range(6):
+        lo, cache = model.decode_step(cfg, p, cache, toks[:, t:t + 1])
+        outs.append(lo)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               atol=2e-3)
+
+
+def test_param_count_dyad_vs_dense():
+    cfg_dyad = ModelCfg(name="a", family="lm", **TINY)
+    cfg_dense = cfg_dyad.replace(linear=factory.DENSE)
+    p_dyad = model.init_params(cfg_dyad, KEY)
+    p_dense = model.init_params(cfg_dense, KEY)
+    assert model.param_count(p_dyad) < model.param_count(p_dense)
+    assert (model.non_embedding_param_count(p_dyad)
+            < model.non_embedding_param_count(p_dense))

@@ -1,0 +1,86 @@
+"""Sharding rule unit tests (pure spec logic; no devices needed)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.sharding import MeshRules, param_spec
+
+RULES = MeshRules(model="model", dp=("data",), fsdp=None)
+RULES_FSDP = MeshRules(model="model", dp=("data",), fsdp=("data",))
+SIZES = {"data": 16, "model": 16}
+
+
+def _specs(arch):
+    cfg = configs.get(arch)
+    return configs.params_specs(cfg)
+
+
+def _spec_of(tree, path_str, rules=RULES):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for p, leaf in flat:
+        from repro.sharding.rules import _path_parts
+        if "/".join(_path_parts(p)) == path_str:
+            return param_spec(p, leaf, rules, SIZES), leaf
+    raise KeyError(path_str)
+
+
+def test_dyad_up_down_tp_pattern():
+    t = _specs("qwen3_0_6b")
+    s, _ = _spec_of(t, "layers/mlp/gate/w1")
+    assert s == P(None, None, "model", None)     # stacked + d_out sharded
+    s, _ = _spec_of(t, "layers/mlp/down/w1")
+    assert s == P(None, None, None, "model")     # d_in (contracting) sharded
+    s, _ = _spec_of(t, "layers/attn/wo/w")
+    assert s == P(None, None, "model")           # dense row-parallel
+
+
+def test_embedding_vocab_sharded_when_divisible():
+    t = _specs("qwen3_0_6b")
+    s, leaf = _spec_of(t, "embed/table")
+    assert s == P("model", None) and leaf.shape[0] % 16 == 0
+
+
+def test_odd_vocab_falls_back_to_replication():
+    t = _specs("whisper_medium")                  # vocab 51865, not /16
+    s, _ = _spec_of(t, "embed/table")
+    assert s == P(None, None)
+
+
+def test_moe_experts_ep_sharded():
+    t = _specs("qwen2_moe_a2_7b")
+    s, leaf = _spec_of(t, "layers/moe/experts/gate/w1")
+    assert s[1] == "model" and leaf.shape[1] == 64   # padded experts / EP
+    s, _ = _spec_of(t, "layers/moe/router/w")
+    assert s == P(None, None, None)               # router replicated
+
+
+def test_small_leaves_replicated():
+    t = _specs("mamba2_780m")
+    for path in ("layers/norm1/scale", "layers/ssm/A_log",
+                 "layers/ssm/conv", "layers/ssm/dt_bias"):
+        s, _ = _spec_of(t, path)
+        assert all(a is None for a in s), path
+
+
+def test_fsdp_adds_data_axis():
+    t = _specs("llama3_405b")
+    s, _ = _spec_of(t, "layers/mlp/gate/w1", RULES_FSDP)
+    assert s == P(None, None, "model", "data")
+    # attn stays dense under the paper's ff-only scope
+    s, _ = _spec_of(t, "layers/attn/wq/w", RULES_FSDP)
+    assert s == P(None, "model", "data")
+
+
+def test_every_leaf_gets_a_legal_spec():
+    """No rule may produce an indivisible placement for any arch."""
+    for arch in configs.ARCHS:
+        t = _specs(arch)
+        flat = jax.tree_util.tree_flatten_with_path(t)[0]
+        for p, leaf in flat:
+            spec = param_spec(p, leaf, RULES_FSDP, SIZES)
+            from repro.sharding.rules import _axes_size
+            for dim, axes in zip(leaf.shape[len(leaf.shape) - len(spec):],
+                                 spec):
+                n = _axes_size(axes, SIZES)
+                assert dim % max(n, 1) == 0, (arch, p, spec, leaf.shape)

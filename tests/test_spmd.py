@@ -1,0 +1,103 @@
+"""SPMD integration on a small fake-device mesh (subprocess: device count is
+locked at first jax init, so multi-device tests must re-exec)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8, timeout: int = 570):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """The SAME train step under a (2,4) mesh must produce the same loss and
+    params as unsharded execution — the SPMD-correctness contract."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import configs
+from repro.optim import AdamW, schedule
+from repro.train import init_train_state, make_train_step
+from repro.sharding import MeshRules, state_shardings, batch_shardings
+from repro.data import SyntheticLM
+
+cfg = configs.get("qwen3_0_6b", smoke=True).replace(
+    vocab_size=256, compute_dtype="float32")
+opt = AdamW(lr=schedule.constant(1e-3))
+data = SyntheticLM(vocab_size=256, seq_len=16, global_batch=8)
+batch = data.batch(0)
+state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+step = make_train_step(cfg, opt)
+
+ref_state, ref_m = jax.jit(step)(state, batch)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+rules = MeshRules(model="model", dp=("data",), fsdp=("data",))
+st_sh = state_shardings(mesh, jax.eval_shape(lambda: state), rules)
+b_sh = batch_shardings(mesh, jax.eval_shape(lambda: batch), rules)
+sharded = jax.jit(step, in_shardings=(st_sh, b_sh),
+                  out_shardings=(st_sh, NamedSharding(mesh, P())))
+sp_state, sp_m = sharded(state, batch)
+assert abs(float(ref_m["loss"]) - float(sp_m["loss"])) < 1e-3, (
+    float(ref_m["loss"]), float(sp_m["loss"]))
+for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                jax.tree.leaves(sp_state["params"])):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+print("SPMD == single-device OK, loss", float(sp_m["loss"]))
+""")
+    assert "OK" in out
+
+
+def test_compressed_psum_shard_map():
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim.compress import compressed_psum
+
+mesh = jax.make_mesh((8,), ("dp",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4) / 7.0
+
+def f(xs):
+    return compressed_psum(xs[0], "dp")
+
+# check_vma=False: the all-gather+sum result is replicated by construction
+# but the varying-axes checker cannot infer that through the int8 round-trip
+y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P(),
+                          check_vma=False))(x)
+expect = np.asarray(x).sum(0)
+np.testing.assert_allclose(np.asarray(y), expect, rtol=0.02, atol=0.02)
+print("compressed_psum OK")
+""")
+    assert "OK" in out
+
+
+def test_dryrun_entrypoint_smoke_cell():
+    """End-to-end dryrun CLI on ONE real cell (512 fake devices) — proves the
+    production path works exactly as documented."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3_0_6b",
+         "--shape", "decode_32k", "--mesh", "multi", "--outdir",
+         "/tmp/dryrun_pytest"],
+        capture_output=True, text=True, timeout=570, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr[-2000:]
+    assert "all requested dry-run cells passed" in r.stdout
+    f = "/tmp/dryrun_pytest/multi/qwen3_0_6b__decode_32k__dyad_it_4.json"
+    res = json.load(open(f))
+    assert res["mesh"] == {"pod": 2, "data": 16, "model": 16}
+    assert res["flops_per_device"] > 0
+    assert res["bottleneck"] in ("compute", "memory", "collective")

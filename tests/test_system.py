@@ -1,0 +1,62 @@
+"""End-to-end behaviour: the paper's central quality claim, in miniature.
+
+DYAD is pretrained next to DENSE on the same learnable synthetic stream; the
+paper's acceptance bar is DYAD >= 90% of DENSE (we check the loss-derived
+accuracy proxy at tiny scale)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import factory
+from repro.data import SyntheticLM
+from repro.models.config import ModelCfg
+from repro.optim import AdamW, schedule
+from repro.train import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pretrain(linear_cfg, steps=120, seed=0):
+    cfg = ModelCfg(name="sys", family="lm", n_layers=2, d_model=64,
+                   vocab_size=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                   d_ff=256, linear=linear_cfg)
+    opt = AdamW(lr=schedule.warmup_cosine(3e-3, 10, steps))
+    data = SyntheticLM(vocab_size=64, seq_len=32, global_batch=16, seed=seed)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(cfg, opt))
+    loss = None
+    for i in range(steps):
+        state, m = step(state, data.batch(i))
+        loss = float(m["loss"])
+    return loss
+
+
+def test_dyad_within_90pct_of_dense():
+    """Paper Tables 2/3: DYAD is competitive (>=90%) with DENSE."""
+    dense = _pretrain(factory.DENSE)
+    dyad = _pretrain(factory.LinearCfg(impl="dyad", n_dyad=4, variant="it"))
+    # compare "solvedness": distance from the random-guess floor
+    floor = float(np.log(64))
+    gain_dense = floor - dense
+    gain_dyad = floor - dyad
+    assert gain_dense > 0.5, f"dense failed to learn ({dense:.3f})"
+    assert gain_dyad >= 0.9 * gain_dense, (dense, dyad)
+
+
+def test_all_variants_learn():
+    floor = float(np.log(64))
+    for variant in ("it", "ot", "dt"):
+        loss = _pretrain(factory.LinearCfg(impl="dyad", n_dyad=4,
+                                           variant=variant), steps=80)
+        assert floor - loss > 0.4, (variant, loss)
+
+
+def test_arch_pool_is_complete():
+    """The assignment's 10 architectures are all selectable."""
+    assert len(configs.ARCHS) == 10
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        assert cfg.n_layers > 0 and cfg.vocab_size > 0
+    # 40 cells = 10 archs x 4 shapes
+    assert len(configs.SHAPES) == 4

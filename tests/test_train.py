@@ -1,0 +1,154 @@
+"""Optimizer correctness, schedules, accumulation, fault-tolerant loop."""
+import signal
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import factory
+from repro.data import SyntheticLM
+from repro.models.config import ModelCfg
+from repro.optim import AdamW, global_norm, schedule
+from repro.train import Trainer, init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+TINY = ModelCfg(name="tiny", family="lm", n_layers=2, d_model=32,
+                vocab_size=64, n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                linear=factory.LinearCfg(impl="dyad", n_dyad=4))
+
+
+def test_adamw_matches_numpy_reference():
+    opt = AdamW(lr=schedule.constant(0.1), b1=0.9, b2=0.99, eps=1e-8,
+                weight_decay=0.0, clip_norm=None)
+    p = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]])}
+    g = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.5]])}
+    st = opt.init(p)
+    new_p, st, _ = opt.update(g, st, p)
+    gn = np.asarray(g["w"])
+    m = 0.1 * gn
+    v = 0.01 * gn * gn
+    upd = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(p["w"]) - 0.1 * upd, rtol=1e-6)
+
+
+def test_adamw_weight_decay_mask():
+    """Norm scales must not be decayed; matrices must."""
+    opt = AdamW(lr=schedule.constant(0.0), weight_decay=0.5, clip_norm=None)
+    # lr=0 isolates the decay path: nothing should change at all
+    p = {"norm": {"scale": jnp.ones((4,))}, "w": jnp.ones((4, 4))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    st = opt.init(p)
+    new_p, _, _ = opt.update(g, st, p)
+    np.testing.assert_array_equal(np.asarray(new_p["norm"]["scale"]),
+                                  np.ones(4))
+
+
+def test_grad_clipping():
+    opt = AdamW(lr=schedule.constant(1e-3), clip_norm=1.0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st = opt.init(p)
+    _, _, m = opt.update(g, st, p)
+    assert float(m["grad_norm"]) > 100  # reported norm is pre-clip
+    assert float(global_norm(g)) == 200.0
+
+
+def test_schedules():
+    f = schedule.warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(f(jnp.asarray(100))) < 1e-6
+    g = schedule.warmup_linear_decay(2.0, 5, 50)
+    assert abs(float(g(jnp.asarray(5))) - 2.0) < 1e-6
+
+
+def test_grad_accum_equivalence():
+    opt = AdamW(lr=schedule.constant(1e-3))
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=8)
+    b = data.batch(0)
+    s1 = init_train_state(TINY, opt, KEY)
+    s2 = init_train_state(TINY, opt, KEY)
+    ns1, _ = jax.jit(make_train_step(TINY, opt))(s1, b)
+    ns2, _ = jax.jit(make_train_step(TINY.replace(grad_accum=4), opt))(s2, b)
+    for a, c in zip(jax.tree.leaves(ns1["params"]),
+                    jax.tree.leaves(ns2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-6)
+
+
+def test_training_reduces_loss():
+    opt = AdamW(lr=schedule.warmup_cosine(3e-3, 5, 80))
+    data = SyntheticLM(vocab_size=64, seq_len=32, global_batch=16)
+    state = init_train_state(TINY, opt, KEY)
+    step = jax.jit(make_train_step(TINY, opt))
+    first = last = None
+    for i in range(80):
+        state, m = step(state, data.batch(i))
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 1.0, (first, last)
+
+
+def test_trainer_checkpoint_resume_and_preemption():
+    opt = AdamW(lr=schedule.constant(1e-3))
+    data = SyntheticLM(vocab_size=64, seq_len=16, global_batch=8)
+    step = jax.jit(make_train_step(TINY, opt))
+    with tempfile.TemporaryDirectory() as d:
+        t1 = Trainer(step, init_train_state(TINY, opt, KEY), data,
+                     ckpt_dir=d, ckpt_every=5, log_every=1000,
+                     log_fn=lambda *_: None)
+        s1, _ = t1.run(12)
+        # fresh trainer resumes exactly
+        t2 = Trainer(step, init_train_state(TINY, opt, KEY), data,
+                     ckpt_dir=d, ckpt_every=1000, log_every=1000,
+                     log_fn=lambda *_: None)
+        t2.maybe_resume()
+        assert t2.step == 12
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(t2.state["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # preemption mid-run: clean checkpoint and stop
+        t2._on_preempt(signal.SIGTERM, None)
+        t2.run(100)
+        assert t2.step == 12   # didn't run further
+
+
+def test_straggler_watchdog():
+    opt = AdamW(lr=schedule.constant(1e-3))
+    data = SyntheticLM(vocab_size=64, seq_len=8, global_batch=4)
+    step_fn = jax.jit(make_train_step(TINY, opt))
+    events = []
+    import time as _time
+
+    calls = {"n": 0}
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 12:
+            _time.sleep(0.5)      # inject a straggler
+        return step_fn(state, batch)
+
+    t = Trainer(slow_step, init_train_state(TINY, opt, KEY), data,
+                straggler_factor=3.0, log_every=1000,
+                on_straggler=lambda *a: events.append(a),
+                log_fn=lambda *_: None)
+    t.run(15)
+    assert len(events) >= 1, "injected straggler not detected"
+
+
+def test_master_weights_adamw_tracks_fp32():
+    """bf16 params + fp32 master must track the pure-fp32 trajectory."""
+    opt32 = AdamW(lr=schedule.constant(0.01), weight_decay=0.0, master=False)
+    optm = AdamW(lr=schedule.constant(0.01), weight_decay=0.0, master=True)
+    p32 = {"w": jnp.ones((8, 8), jnp.float32) * 0.5}
+    pbf = {"w": p32["w"].astype(jnp.bfloat16)}
+    s32, sm = opt32.init(p32), optm.init(pbf)
+    key = jax.random.PRNGKey(0)
+    for i in range(30):
+        g = jax.random.normal(jax.random.fold_in(key, i), (8, 8)) * 0.1
+        p32, s32, _ = opt32.update({"w": g}, s32, p32)
+        pbf, sm, _ = optm.update({"w": g.astype(jnp.bfloat16)}, sm, pbf)
+    assert float(jnp.abs(sm["master"]["w"] - p32["w"]).max()) < 5e-3
+    assert pbf["w"].dtype == jnp.bfloat16
