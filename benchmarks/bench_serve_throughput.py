@@ -1,0 +1,111 @@
+"""Serving throughput: compiled engine vs the seed Python-loop baselines.
+
+Measures, over a (batch x seq-len) grid and for DENSE vs DYAD ff:
+
+* prefill tokens/sec — single-pass ``model.prefill`` (ONE jitted call per
+  request batch) vs the seed token-wise loop (one jitted call per token);
+* decode tokens/sec  — scan-compiled ``Engine.generate`` (one jitted
+  ``lax.scan`` for the whole loop) vs the seed Python-loop
+  ``Engine.generate_reference``.
+
+CSV columns: ``name,us_per_call,derived`` where derived carries tokens/sec
+and the compiled-over-baseline speedup.  The acceptance cell is
+``decode b8 n128``: scan decode must be >= 5x the Python loop on CPU.
+
+    PYTHONPATH=src python benchmarks/run.py serve_throughput
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro import configs
+from repro.models import model
+from repro.serve import Engine, prefill_tokenwise
+
+ARCH = "qwen3_0_6b"
+PREFILL_GRID = [(1, 32), (4, 64), (8, 128)]     # (batch, prompt_len)
+DECODE_GRID = [(1, 32), (8, 128)]               # (batch, new_tokens)
+PROMPT_FOR_DECODE = 16
+
+
+def _time(fn, iters=3, warmup=1) -> float:
+    """Median wall-seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _bench_linear(tag: str, linear) -> None:
+    cfg = configs.get(ARCH, smoke=True, linear=linear)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+
+    # -- prefill: single-pass vs token-wise ---------------------------------
+    for B, S in PREFILL_GRID:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        single = jax.jit(
+            lambda p, c, t: model.prefill(cfg, p, c, t))
+
+        def run_single():
+            cache = model.init_cache(cfg, B, S + 1, jnp.float32)
+            return single(params, cache, toks)
+
+        def run_tokenwise():
+            cache = model.init_cache(cfg, B, S + 1, jnp.float32)
+            return prefill_tokenwise(cfg, params, cache, toks)
+
+        t_new = _time(run_single)
+        t_old = _time(run_tokenwise)
+        tps = B * S / t_new
+        emit(f"{tag}_prefill_b{B}_s{S}_single", t_new * 1e6,
+             f"{tps:.0f} tok/s; {t_old / t_new:.1f}x vs tokenwise")
+        emit(f"{tag}_prefill_b{B}_s{S}_tokenwise", t_old * 1e6,
+             f"{B * S / t_old:.0f} tok/s")
+
+    # -- decode: scan loop vs Python loop -----------------------------------
+    for B, N in DECODE_GRID:
+        engine = Engine(cfg, params, max_len=PROMPT_FOR_DECODE + N)
+        prompts = jax.random.randint(key, (B, PROMPT_FOR_DECODE), 0,
+                                     cfg.vocab_size)
+        t_new = _time(lambda: engine.generate(prompts, N))
+        t_old = _time(lambda: engine.generate_reference(prompts, N))
+        speedup = t_old / t_new
+        emit(f"{tag}_decode_b{B}_n{N}_scan", t_new * 1e6,
+             f"{B * N / t_new:.0f} tok/s; {speedup:.1f}x vs jitted-loop")
+        emit(f"{tag}_decode_b{B}_n{N}_loop", t_old * 1e6,
+             f"{B * N / t_old:.0f} tok/s")
+
+    # -- acceptance cell: end-to-end generate vs the SEED Engine.generate ---
+    # (token-wise EAGER prefill + per-token Python decode dispatch).  One
+    # iteration — the seed path costs seconds per call.
+    B, N = DECODE_GRID[-1]
+    engine = Engine(cfg, params, max_len=PROMPT_FOR_DECODE + N)
+    prompts = jax.random.randint(key, (B, PROMPT_FOR_DECODE), 0,
+                                 cfg.vocab_size)
+    t_new = _time(lambda: engine.generate(prompts, N))
+    t_seed = _time(lambda: engine.generate_reference(prompts, N,
+                                                     jit_prefill=False),
+                   iters=1, warmup=0)
+    emit(f"{tag}_generate_b{B}_n{N}_seed", t_seed * 1e6,
+         f"{B * N / t_seed:.0f} tok/s; scan engine {t_seed / t_new:.1f}x "
+         "faster end-to-end")
+
+
+def run() -> None:
+    _bench_linear("dense", configs.DENSE)
+    _bench_linear("dyad", configs.DYAD_DEFAULT)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

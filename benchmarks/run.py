@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
 * bench_memory      — Table 11 (params / checkpoint / in-training memory)
 * bench_width_sweep — Figure 6 (speedup vs model width)
 * bench_mnist       — §3.4.5 (vision probe on CPU)
+* bench_serve_throughput — beyond-paper: end-to-end serving tokens/sec
+                      (single-pass prefill + scan decode vs the seed loops)
 
 Roofline terms (EXPERIMENTS §Roofline) come from the dry-run
 (``python -m repro.launch.dryrun``), which needs the 512-device env and is
@@ -15,13 +17,19 @@ therefore not run from here.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# allow `python benchmarks/run.py` from the repo root (the documented form):
+# the `benchmarks` package lives next to this file's parent directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     from benchmarks import (bench_ff_timing, bench_memory, bench_mnist,
-                            bench_quality, bench_width_sweep)
+                            bench_quality, bench_serve_throughput,
+                            bench_width_sweep)
 
     suites = {
         "ff_timing": bench_ff_timing.run,
@@ -29,6 +37,7 @@ def main() -> None:
         "memory": bench_memory.run,
         "width_sweep": bench_width_sweep.run,
         "mnist": bench_mnist.run,
+        "serve_throughput": bench_serve_throughput.run,
     }
     wanted = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

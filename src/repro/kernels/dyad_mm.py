@@ -25,6 +25,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _largest_divisor(dim: int, target: int) -> int:
     d = min(dim, target)
@@ -118,7 +122,7 @@ def dyad_mm_blocks_two(
             pltpu.VMEM((bB, bO), jnp.float32),
             pltpu.VMEM((bB, bO), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -164,7 +168,7 @@ def dyad_mm_blocks(
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((B, n, d_out), x1.dtype),
         scratch_shapes=[pltpu.VMEM((bB, bO), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,9 +1,24 @@
 """Serving launcher: initialize (or restore) a model and run batched
 generation — the interactive counterpart of the decode_* dry-run cells.
 
+Two engines (``--engine``):
+
+* ``batch`` (default) — :class:`repro.serve.Engine`: one jitted single-pass
+  prefill for the whole (B, S) int32 prompt batch, then one jitted
+  ``lax.scan`` for the whole decode loop.  Output: (B, new_tokens) int32.
+* ``continuous`` — :class:`repro.serve.ContinuousBatchingEngine`: submits
+  ``--requests`` prompts with heterogeneous lengths into ``--slots`` cache
+  slots; finished sequences retire at EOS/length and queued requests
+  back-fill freed slots, all through one jitted padded-batch step.
+
+The KV/SSM cache is allocated once at ``prompt_len + new_tokens`` (fp32 by
+default; see ``Engine(cache_dtype=...)``) and persists across the decode.
+
 Example:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
         --batch 4 --prompt-len 16 --new-tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --smoke \
+        --engine continuous --requests 12 --slots 4
 """
 from __future__ import annotations
 
@@ -16,7 +31,7 @@ import jax.numpy as jnp
 from repro import configs
 from repro.checkpoint import CheckpointManager
 from repro.models import model
-from repro.serve import Engine
+from repro.serve import ContinuousBatchingEngine, Engine
 
 
 def main():
@@ -24,10 +39,18 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--linear", default=None)
+    ap.add_argument("--engine", choices=("batch", "continuous"),
+                    default="batch")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="continuous engine: number of submitted requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous engine: cache slots (padded batch)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="continuous engine: retire sequences at this token")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -44,6 +67,27 @@ def main():
             print(f"[serve] restored checkpoint step {step}")
 
     max_len = args.prompt_len + args.new_tokens
+
+    if args.engine == "continuous":
+        engine = ContinuousBatchingEngine(
+            cfg, params, n_slots=args.slots, max_len=max_len,
+            eos_id=args.eos_id, temperature=args.temperature, seed=args.seed)
+        lengths = [max(1, args.prompt_len - (i % 4)) for i in range(args.requests)]
+        prompts = [
+            jax.random.randint(jax.random.fold_in(key, i), (lengths[i],), 0,
+                               cfg.vocab_size)
+            for i in range(args.requests)]
+        t0 = time.perf_counter()
+        uids = [engine.submit(p, args.new_tokens) for p in prompts]
+        results = engine.run()
+        dt = time.perf_counter() - t0
+        total = sum(len(results[u]) for u in uids)
+        print(f"[serve] continuous: {args.requests} requests over "
+              f"{args.slots} slots, {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s)")
+        print({u: results[u][:8] for u in uids[:4]})
+        return
+
     engine = Engine(cfg, params, max_len=max_len)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

@@ -82,7 +82,10 @@ def _naive_sdpa(q, k, v, qpos, kpos, causal, window):
 
 
 def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
-    """Online-softmax over key chunks: memory O(S * chunk) instead of O(S*T)."""
+    """Online-softmax over key chunks: memory O(S * chunk) instead of O(S*T).
+
+    ``kpos`` may be (T,) or per-batch (B, T) — the latter from per-slot
+    continuous-batching caches."""
     B, T = k.shape[0], k.shape[1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     nchunks = -(-T // chunk)
@@ -90,17 +93,21 @@ def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kpos = jnp.pad(kpos, (0, pad), constant_values=-(10 ** 9))
+        kpos = jnp.pad(kpos, [(0, 0)] * (kpos.ndim - 1) + [(0, pad)],
+                       constant_values=-(10 ** 9))
     kc = k.reshape(B, nchunks, chunk, *k.shape[2:]).swapaxes(0, 1)
     vc = v.reshape(B, nchunks, chunk, *v.shape[2:]).swapaxes(0, 1)
-    pc = kpos.reshape(nchunks, chunk)
+    pc = (kpos.reshape(B, nchunks, chunk).swapaxes(0, 1) if kpos.ndim == 2
+          else kpos.reshape(nchunks, chunk))
 
     def step(carry, xs):
         m_prev, l_prev, acc = carry
         kb, vb, pb = xs
         s = jnp.einsum("bskgh,btkh->bskgt", q, kb,
                        preferred_element_type=jnp.float32) * scale
-        valid = _mask(qpos, pb, causal, window)[None, :, None, None, :]
+        valid = _mask(qpos, pb, causal, window)
+        valid = (valid[:, :, None, None, :] if valid.ndim == 3
+                 else valid[None, :, None, None, :])
         s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         alpha = jnp.exp(m_prev - m_new)
@@ -181,38 +188,84 @@ def attention(
 
     if positions is None:
         offset = cache["idx"] if cache is not None else 0
-        positions = offset + jnp.arange(S)
+        positions = (offset[..., None] + jnp.arange(S)
+                     if getattr(offset, "ndim", 0) == 1
+                     else offset + jnp.arange(S))
     qpos = positions
     if rope_theta is not None and kv_input is None:
-        q = apply_rope(q, jnp.broadcast_to(qpos, (S,)), rope_theta)
-        k = apply_rope(k, jnp.broadcast_to(qpos, (Tsrc,)) if cache is None
-                       else jnp.broadcast_to(qpos, (Tsrc,)), rope_theta)
+        # cache path: Tsrc == S (k/v are the NEW tokens, roped before the
+        # cache write so cached entries never need re-rotation).
+        rp = qpos if qpos.ndim > 1 else jnp.broadcast_to(qpos, (S,))
+        q = apply_rope(q, rp, rope_theta)
+        k = apply_rope(k, rp, rope_theta)
 
     new_cache = None
     if cache is not None and kv_input is None:
         idx = cache["idx"]
         L = cache["k"].shape[1]
-        if S == 1:
-            # ring-buffer write: supports caches bounded to the attention
-            # window (slot = idx % L).  For full-length caches idx < L and
-            # this reduces to a plain indexed write.
-            slot = idx % L
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-            j = jnp.arange(L)
-            kpos = idx - ((idx - j) % L)          # position held by each slot
-            kpos = jnp.where(kpos >= 0, kpos, -(10 ** 9))
+        kd, vd = cache["k"].dtype, cache["v"].dtype
+        attend_cache = True      # False: attend the in-flight K/V (S >= L)
+        if idx.ndim == 0:
+            # shared write offset: every batch row is at the same position
+            # (the homogeneous-batch Engine path).
+            if S == 1:
+                # ring-buffer write: supports caches bounded to the attention
+                # window (slot = idx % L).  For full-length caches idx < L and
+                # this reduces to a plain indexed write.
+                slot = idx % L
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(kd), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(vd), (0, slot, 0, 0))
+                j = jnp.arange(L)
+                kpos = idx - ((idx - j) % L)      # position held by each slot
+                kpos = jnp.where(kpos >= 0, kpos, -(10 ** 9))
+            elif S < L:
+                # multi-token (prefill) write requires idx + S <= cache length.
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(kd), (0, idx, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(vd), (0, idx, 0, 0))
+                kpos = jnp.arange(L)
+                kpos = jnp.where(kpos < idx + S, kpos, -(10 ** 9))
+            else:
+                # prompt at least fills the window-bounded ring (S >= L):
+                # attend over the full in-flight K/V (the window mask bounds
+                # the reach) and persist only the last L tokens, laid out at
+                # their ring slots (slot = position % L) so decode continues
+                # seamlessly.  Assumes a fresh-stream prefill (queries do not
+                # reach keys written before ``idx``).
+                kpos = idx + jnp.arange(S)
+                sel = S - L + ((jnp.arange(L) - idx - S) % L)
+                ck, cv = k.astype(kd)[:, sel], v.astype(vd)[:, sel]
+                attend_cache = False
         else:
-            # multi-token (prefill) write requires idx + S <= cache length.
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
-            kpos = jnp.arange(L)
-            kpos = jnp.where(kpos < idx + S, kpos, -(10 ** 9))
-        k, v = ck, cv
+            # per-slot write offsets, idx: (B,) — the continuous-batching
+            # path where heterogeneous requests share one padded step.
+            # kpos becomes (B, L) so masking stays per-slot exact.
+            j = jnp.arange(L)[None, :]
+            if S == 1 or S < L:
+                start = idx % L if S == 1 else idx   # ring wrap in decode
+                write = lambda buf, new, i: jax.lax.dynamic_update_slice(
+                    buf, new, (i, 0, 0))
+                ck = jax.vmap(write)(cache["k"], k.astype(kd), start)
+                cv = jax.vmap(write)(cache["v"], v.astype(vd), start)
+                if S == 1:
+                    kpos = idx[:, None] - ((idx[:, None] - j) % L)
+                    kpos = jnp.where(kpos >= 0, kpos, -(10 ** 9))
+                else:
+                    kpos = jnp.where(j < idx[:, None] + S, j, -(10 ** 9))
+            else:
+                # per-slot variant of the S >= L windowed-ring prefill
+                kpos = idx[:, None] + jnp.arange(S)
+                sel = S - L + ((j - idx[:, None] - S) % L)
+                ck = jnp.take_along_axis(k.astype(kd), sel[..., None, None],
+                                         axis=1)
+                cv = jnp.take_along_axis(v.astype(vd), sel[..., None, None],
+                                         axis=1)
+                attend_cache = False
+        if attend_cache:
+            k, v = ck, cv
         new_cache = {"k": ck, "v": cv, "idx": idx + S}
     else:
         kpos = jnp.arange(k.shape[1])
@@ -231,9 +284,11 @@ def attention(
 
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
-                  dtype=jnp.bfloat16):
+                  dtype=jnp.bfloat16, *, per_slot: bool = False):
+    """KV cache pytree.  ``per_slot=True`` makes ``idx`` a (batch,) vector so
+    each batch row (continuous-batching slot) advances independently."""
     return {
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
         "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
-        "idx": jnp.zeros((), jnp.int32),
+        "idx": jnp.zeros((batch,) if per_slot else (), jnp.int32),
     }

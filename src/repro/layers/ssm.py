@@ -62,10 +62,17 @@ def _segsum(x):
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def _causal_conv(u, kernel):
-    """Depthwise causal conv: u (B,S,Ch), kernel (W,Ch)."""
+def _causal_conv(u, kernel, hist=None):
+    """Depthwise causal conv: u (B,S,Ch), kernel (W,Ch).
+
+    ``hist`` is an optional (B, W-1, Ch) left context — the conv tail carried
+    in the decode cache.  ``hist=None`` zero-pads (a fresh stream; identical
+    to a zero-initialized cache)."""
     W = kernel.shape[0]
-    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    if hist is None:
+        up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([hist.astype(u.dtype), u], axis=1)
     out = jnp.zeros_like(u)
     for w in range(W):
         out = out + up[:, w:w + u.shape[1], :] * kernel[w]
@@ -81,33 +88,55 @@ def _project(params, x, lin_cfg, n_groups, d_state, n_heads, head_dim):
     return z, xs, bc, dt
 
 
-def apply_ssm(params, x, lin_cfg, *, d_state=128, head_dim=64, n_groups=1,
-              chunk=256):
-    """Chunked SSD forward.  x: (B, S, D) -> (B, S, D)."""
+def _ssd_forward(params, x, lin_cfg, *, d_state, head_dim, n_groups, chunk,
+                 hist=None, s0=None):
+    """Chunked SSD forward that ALSO yields the recurrent decode cache.
+
+    x: (B, S, D) in the activation dtype.  ``hist`` is the (B, W-1, Ch) conv
+    history and ``s0`` the (B, H, P, N) fp32 initial state — both optional
+    (None == fresh stream, identical to a zero-initialized cache).
+
+    Sequences whose length does not divide the SSD chunk are right-padded
+    internally; padded positions get dt == 0 (decay exp(0)=1, input term 0),
+    so they update neither the state nor any real position's output.
+
+    Returns (y (B,S,D), final_state (B,H,P,N) fp32, conv_tail (B,W-1,Ch)) —
+    final_state/conv_tail are exactly what ``ssm_decode_step`` expects next.
+    """
     B, S, D = x.shape
     n_heads = params["A_log"].shape[0]
     d_inner = n_heads * head_dim
+    L = min(chunk, S)
+    Sp = -(-S // L) * L
+    if Sp != S:
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0)))
     z, xs, bc, dt = _project(params, x, lin_cfg, n_groups, d_state, n_heads,
                              head_dim)
     conv_in = jnp.concatenate([xs, bc], axis=-1)
-    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv"].astype(x.dtype)))
+    W = params["conv"].shape[0]
+    conv_tail = jnp.concatenate(
+        [hist.astype(conv_in.dtype) if hist is not None
+         else jnp.zeros((B, W - 1, conv_in.shape[-1]), conv_in.dtype),
+         conv_in[:, :S]], axis=1)[:, -(W - 1):]
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, params["conv"].astype(x.dtype), hist=hist))
     xs, bmat, cmat = jnp.split(
         conv_out, [d_inner, d_inner + n_groups * d_state], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
-                         params["dt_bias"].astype(jnp.float32))     # (B,S,H)
+                         params["dt_bias"].astype(jnp.float32))     # (B,Sp,H)
+    if Sp != S:
+        dt = jnp.where(jnp.arange(Sp)[None, :, None] < S, dt, 0.0)
     A = -jnp.exp(params["A_log"].astype(jnp.float32))               # (H,)
-    xh = xs.reshape(B, S, n_heads, head_dim).astype(jnp.float32)
-    bmat = bmat.reshape(B, S, n_groups, d_state).astype(jnp.float32)
-    cmat = cmat.reshape(B, S, n_groups, d_state).astype(jnp.float32)
+    xh = xs.reshape(B, Sp, n_heads, head_dim).astype(jnp.float32)
+    bmat = bmat.reshape(B, Sp, n_groups, d_state).astype(jnp.float32)
+    cmat = cmat.reshape(B, Sp, n_groups, d_state).astype(jnp.float32)
     # broadcast groups over heads
     rep = n_heads // n_groups
-    bh = jnp.repeat(bmat, rep, axis=2)                              # (B,S,H,N)
+    bh = jnp.repeat(bmat, rep, axis=2)                              # (B,Sp,H,N)
     ch = jnp.repeat(cmat, rep, axis=2)
 
-    L = min(chunk, S)
-    assert S % L == 0, f"seq {S} must divide ssd chunk {L}"
-    nc = S // L
+    nc = Sp // L
     r = lambda t: t.reshape(B, nc, L, *t.shape[2:])
     xh, bh, ch, dt = r(xh), r(bh), r(ch), r(dt)
 
@@ -131,20 +160,46 @@ def apply_ssm(params, x, lin_cfg, *, d_state=128, head_dim=64, n_groups=1,
         s_new = s_prev * dec[..., None, None] + st
         return s_new, s_prev
 
-    s0 = jnp.zeros((B, n_heads, head_dim, d_state), jnp.float32)
-    _, prev_states = jax.lax.scan(
-        step, s0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    if s0 is None:
+        s0 = jnp.zeros((B, n_heads, head_dim, d_state), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
     prev_states = prev_states.swapaxes(0, 1)                        # (B,nc,H,P,N)
 
     # 4) state contribution to outputs
     y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", ch, prev_states,
                        jnp.exp(dA_cs))
-    y = (y_diag + y_off).reshape(B, S, n_heads, head_dim)
-    y = y + params["D"].astype(jnp.float32)[:, None] * xh.reshape(B, S, n_heads,
-                                                                  head_dim)
-    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = (y_diag + y_off).reshape(B, Sp, n_heads, head_dim)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh.reshape(
+        B, Sp, n_heads, head_dim)
+    y = y.reshape(B, Sp, d_inner).astype(x.dtype)
     y = norms.rmsnorm(params["norm"], y * jax.nn.silu(z))
-    return factory.apply(params["wo"], y, lin_cfg, site="ssm")
+    y = factory.apply(params["wo"], y, lin_cfg, site="ssm")
+    return y[:, :S], final_state, conv_tail
+
+
+def apply_ssm(params, x, lin_cfg, *, d_state=128, head_dim=64, n_groups=1,
+              chunk=256):
+    """Chunked SSD forward (no cache).  x: (B, S, D) -> (B, S, D)."""
+    y, _, _ = _ssd_forward(params, x, lin_cfg, d_state=d_state,
+                           head_dim=head_dim, n_groups=n_groups, chunk=chunk)
+    return y
+
+
+def ssm_prefill(params, x, cache, lin_cfg, *, d_state=128, head_dim=64,
+                n_groups=1, chunk=256):
+    """Single-pass multi-token prefill: chunked SSD forward + cache handoff.
+
+    x: (B, S, D); cache: {"conv" (B,W-1,Ch), "state" (B,H,P,N) fp32} — the
+    layout made by :func:`init_ssm_cache`.  One call replaces S sequential
+    :func:`ssm_decode_step` calls; the returned cache continues decode at
+    position S.  Returns (y (B,S,D), new_cache).
+    """
+    y, state, tail = _ssd_forward(
+        params, x, lin_cfg, d_state=d_state, head_dim=head_dim,
+        n_groups=n_groups, chunk=chunk, hist=cache["conv"], s0=cache["state"])
+    return y, {"conv": tail.astype(cache["conv"].dtype), "state": state}
 
 
 def init_ssm_cache(batch, d_model, *, d_state=128, head_dim=64, expand=2,

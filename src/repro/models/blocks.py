@@ -78,6 +78,19 @@ def _self_attn(p, cfg: ModelCfg, x, *, causal, cache, positions):
         chunk=cfg.attn_chunk, cache=cache)
 
 
+def _ssm_with_cache(params, cfg: ModelCfg, h, cache, prefill: bool):
+    """Cached SSM mixer: one-token recurrent step, or the single-pass
+    multi-token prefill (full chunked SSD forward + cache handoff)."""
+    if prefill:
+        return ssm_lib.ssm_prefill(
+            params, h, cache, cfg.linear, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+            chunk=cfg.ssd_chunk)
+    return ssm_lib.ssm_decode_step(
+        params, h, cache, cfg.linear, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups)
+
+
 def apply_block(
     params,
     x,
@@ -87,8 +100,15 @@ def apply_block(
     cache=None,
     enc_out=None,
     positions=None,
+    prefill: bool = False,
 ):
-    """Returns (x, new_cache, aux)."""
+    """Returns (x, new_cache, aux).
+
+    ``cache`` selects the cached (serving) path; ``prefill=True`` marks a
+    multi-token teacher-forced pass THROUGH the cache (single-pass prefill) —
+    attention writes S tokens of K/V at once and the SSM mixer runs the
+    chunked SSD forward instead of S recurrent steps.
+    """
     new_cache = {} if cache is not None else None
     aux = jnp.zeros((), jnp.float32)
     causal = kind != "enc"
@@ -100,10 +120,8 @@ def apply_block(
                            cache=cache.get("kv") if cache else None,
                            positions=positions)
         if cache is not None:
-            s, sc = ssm_lib.ssm_decode_step(
-                params["ssm"], h, cache["ssm"], cfg.linear,
-                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
-                n_groups=cfg.ssm_groups)
+            s, sc = _ssm_with_cache(params["ssm"], cfg, h, cache["ssm"],
+                                    prefill)
             new_cache = {"kv": kv, "ssm": sc}
         else:
             s = ssm_lib.apply_ssm(
@@ -115,10 +133,8 @@ def apply_block(
                        norms.rmsnorm(params["bnorm_s"], s))
     elif kind == "ssm":
         if cache is not None:
-            s, sc = ssm_lib.ssm_decode_step(
-                params["ssm"], h, cache["ssm"], cfg.linear,
-                d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
-                n_groups=cfg.ssm_groups)
+            s, sc = _ssm_with_cache(params["ssm"], cfg, h, cache["ssm"],
+                                    prefill)
             new_cache = {"ssm": sc}
         else:
             s = ssm_lib.apply_ssm(
@@ -178,13 +194,18 @@ def _cross_from_cache(p, cfg: ModelCfg, q_in, cache):
 
 
 def init_block_cache(cfg: ModelCfg, kind: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16):
-    """Cache pytree for ONE block (stacked over layers by the model)."""
+                     dtype=jnp.bfloat16, *, per_slot: bool = False):
+    """Cache pytree for ONE block (stacked over layers by the model).
+
+    ``per_slot=True`` gives the KV cache a per-batch-row write index so each
+    row (continuous-batching slot) can sit at a different sequence position.
+    """
     c = {}
     if kind in ("lm", "moe", "hybrid", "dec_cross"):
         # ring buffer when sliding-window attention bounds the reach
         L = min(max_len, cfg.window) if cfg.window else max_len
-        c["kv"] = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.hd, dtype)
+        c["kv"] = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.hd,
+                                         dtype, per_slot=per_slot)
     if kind in ("ssm", "hybrid"):
         c["ssm"] = ssm_lib.init_ssm_cache(
             batch, cfg.d_model, d_state=cfg.ssm_state,

@@ -73,7 +73,7 @@ def _final_norm(cfg, p, x):
 
 
 def _run_stack(cfg: ModelCfg, stacked, x, kind: str, *, enc_out=None,
-               positions=None, caches=None):
+               positions=None, caches=None, prefill: bool = False):
     """scan over stacked layer params (and caches).  Returns (x, caches, aux)."""
 
     def body(carry, scanned):
@@ -81,7 +81,8 @@ def _run_stack(cfg: ModelCfg, stacked, x, kind: str, *, enc_out=None,
         lp = scanned[0] if caches is not None else scanned
         lc = scanned[1] if caches is not None else None
         h, nc, a = blocks.apply_block(lp, h, cfg, kind, cache=lc,
-                                      enc_out=enc_out, positions=positions)
+                                      enc_out=enc_out, positions=positions,
+                                      prefill=prefill)
         return (h, aux + a), nc
 
     if cfg.remat and caches is None:
@@ -111,7 +112,12 @@ def _embed_inputs(cfg: ModelCfg, params, batch, offset=0):
                                          add_positions=False)
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
     S = x.shape[1]
-    positions = offset + jnp.arange(S)
+    # offset may be a scalar (homogeneous batch) or a (B,) vector of per-slot
+    # positions (continuous batching) -> positions (S,) or (B, S).
+    if getattr(offset, "ndim", 0) == 1:
+        positions = offset[:, None] + jnp.arange(S)
+    else:
+        positions = offset + jnp.arange(S)
     if cfg.pos_embed == "learned":
         x = x + embed_lib.embed(params["pos"], positions)  # pos table stays gathered
     return x.astype(cfg.cdtype), positions
@@ -156,8 +162,15 @@ def loss_fn(cfg: ModelCfg, params, batch):
                    "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
 
 
-def init_cache(cfg: ModelCfg, batch: int, max_len: int, dtype=jnp.bfloat16):
-    one = blocks.init_block_cache(cfg, block_kind(cfg), batch, max_len, dtype)
+def init_cache(cfg: ModelCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, per_slot: bool = False):
+    """Stacked (n_layers-leading) decode cache for ``batch`` sequences.
+
+    ``per_slot=True`` gives every leaf a batch axis at position 1 — including
+    the KV write index, which becomes (n_layers, batch) so each slot advances
+    independently (the continuous-batching layout)."""
+    one = blocks.init_block_cache(cfg, block_kind(cfg), batch, max_len, dtype,
+                                  per_slot=per_slot)
     stacked = jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape).copy()
         if leaf.ndim > 0 else jnp.zeros((cfg.n_layers,), leaf.dtype), one)
@@ -181,6 +194,39 @@ def prefill_cross(cfg: ModelCfg, params, cache, frames):
     cache["xk"] = xk.astype(cache["xk"].dtype)
     cache["xv"] = xv.astype(cache["xv"].dtype)
     return cache
+
+
+def prefill(cfg: ModelCfg, params, cache, tokens, *, frames=None,
+            last_only: bool = True):
+    """Single-pass prefill: ONE full-sequence forward with cache writes.
+
+    tokens: (B, S) int32 prompts; cache: a fresh (or position-consistent)
+    pytree from :func:`init_cache`.  Attention layers write all S tokens of
+    K/V in one ``dynamic_update_slice``; SSM layers run the chunked SSD dual
+    form and hand off the final recurrent state — no per-token Python loop,
+    one jitted call per request batch.
+
+    Requires ``pos + S <= cache length`` for full-length KV caches (windowed
+    ring caches additionally need ``S <= window`` at prefill).
+
+    Returns ``(logits, new_cache)`` with logits fp32 ``(B, 1, vocab)`` for the
+    last position (``last_only=True``, the production path — a full (B,S,V)
+    tensor at 32k x 150k is tens of GB) or ``(B, S, vocab)`` otherwise.  The
+    returned cache is positioned at S, ready for :func:`decode_step`.
+    """
+    if cfg.family == "encdec" and frames is not None:
+        cache = prefill_cross(cfg, params, cache, frames)
+    offset = _cache_pos(cfg, cache)
+    x, positions = _embed_inputs(cfg, params, {"tokens": tokens},
+                                 offset=offset)
+    x, new_cache, _ = _run_stack(cfg, params["layers"], x, block_kind(cfg),
+                                 positions=positions, caches=cache,
+                                 prefill=True)
+    x = _final_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    head = params.get("head", params["embed"])
+    return embed_lib.unembed(head, x), new_cache
 
 
 def decode_step(cfg: ModelCfg, params, cache, tokens):

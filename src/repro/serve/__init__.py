@@ -1,2 +1,12 @@
-"""Serving: prefill + batched decode over persistent KV/SSM caches."""
-from repro.serve.engine import Engine, make_serve_step, prefill  # noqa: F401
+"""Serving: single-pass prefill + scan-compiled decode over persistent
+KV/SSM caches, with continuous batching for heterogeneous requests."""
+from repro.serve.engine import (  # noqa: F401
+    ContinuousBatchingEngine,
+    Engine,
+    Request,
+    SlotManager,
+    make_serve_step,
+    prefill,
+    prefill_tokenwise,
+    sample_token,
+)

@@ -1,69 +1,384 @@
-"""Batched serving engine: prefill + step-wise decode over a persistent cache.
+"""Batched serving engine: single-pass prefill, scan-compiled decode, and a
+continuous-batching slot manager.
 
-``serve_step`` (one new token against a long KV/SSM cache) is exactly what the
-decode_* dry-run shapes lower.  The engine adds greedy/temperature sampling and
-a simple continuous-batching slot model on top.
+Three layers of API, fastest first:
+
+* :class:`Engine` — homogeneous batches.  ``generate`` issues ONE jitted
+  prefill call for the whole prompt batch (full-sequence forward with cache
+  writes) and ONE jitted ``lax.scan`` call for the whole decode loop over a
+  preallocated output buffer, so per-token Python dispatch disappears from
+  the hot path.
+* :class:`ContinuousBatchingEngine` — heterogeneous requests share one padded
+  jitted step.  A :class:`SlotManager` allocates fixed cache slots, tracks
+  per-slot lengths, retires sequences at EOS (or length budget) and admits
+  queued requests into freed slots; the per-slot KV write index
+  (``init_cache(..., per_slot=True)``) lets every slot sit at a different
+  sequence position.
+* :func:`prefill_tokenwise` / :meth:`Engine.generate_reference` — the seed's
+  token-per-Python-iteration paths, kept as correctness oracles for tests and
+  as the baseline for ``benchmarks/bench_serve_throughput.py``.
+
+Cache contract (see :func:`repro.models.model.init_cache`): every leaf is
+stacked with a leading ``n_layers`` axis; batch is axis 1.  KV caches hold
+``k``/``v`` ``(n_layers, B, L, n_kv, head_dim)`` in ``cache_dtype`` plus a
+write index ``idx`` (``(n_layers,)`` scalar-per-layer, or ``(n_layers, B)``
+per-slot); SSM caches hold ``conv`` ``(n_layers, B, W-1, Ch)`` and the fp32
+``state`` ``(n_layers, B, H, P, N)``.  Logits are always fp32
+``(B, 1, vocab)``.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
-from typing import Optional
+import itertools
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import model
 from repro.models.config import ModelCfg
 
 
 def make_serve_step(cfg: ModelCfg):
-    """(params, cache, tokens(B,1)) -> (logits, new_cache)."""
+    """(params, cache, tokens (B,1) int32) -> (logits (B,1,V) fp32, new_cache).
+
+    Exactly the function the decode_* dry-run shapes lower."""
     def serve_step(params, cache, tokens):
         return model.decode_step(cfg, params, cache, tokens)
     return serve_step
 
 
 def prefill(cfg: ModelCfg, params, cache, tokens, frames=None):
-    """Fill the cache with a prompt (teacher-forced pass with cache writes).
+    """Single-pass prefill: one full-sequence forward with cache writes.
 
-    Returns (last_logits (B,1,V), cache)."""
+    tokens: (B, S) int32; optional ``frames`` (encdec audio) fill the
+    cross-attention K/V first.  Returns (last_logits (B,1,V) fp32, cache
+    positioned at S).  One jitted call per request batch — no per-token loop.
+    """
+    return model.prefill(cfg, params, cache, tokens, frames=frames)
+
+
+_jit_decode_step = jax.jit(model.decode_step, static_argnums=0)
+
+
+def prefill_tokenwise(cfg: ModelCfg, params, cache, tokens, frames=None):
+    """The seed's token-per-Python-iteration prefill — S sequential
+    ``decode_step`` dispatches (jitted, one call PER TOKEN).  Kept as the
+    correctness oracle and benchmark baseline; use :func:`prefill` (one call
+    per request batch) for serving.
+    """
     if cfg.family == "encdec" and frames is not None:
         cache = model.prefill_cross(cfg, params, cache, frames)
     B, S = tokens.shape
-    step = make_serve_step(cfg)
     logits = None
-    for t in range(S):                      # token-wise; fine for tests
-        logits, cache = step(params, cache, tokens[:, t:t + 1])
+    for t in range(S):
+        logits, cache = _jit_decode_step(cfg, params, cache,
+                                         tokens[:, t:t + 1])
     return logits, cache
 
 
+def sample_token(logits, temperature: float, key=None):
+    """Greedy (temperature <= 0 or no key) or temperature sampling.
+
+    logits: (B, S, V) fp32 — only the last position is used.  Returns
+    (B, 1) int32/int64 next tokens.  ``temperature`` must be a static Python
+    float (it selects the sampling branch at trace time).
+    """
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits[:, -1:], axis=-1)
+    return jax.random.categorical(
+        key, logits[:, -1] / temperature, axis=-1)[:, None]
+
+
 class Engine:
-    """Greedy/temperature batched generation."""
+    """Greedy/temperature batched generation over a persistent cache.
+
+    ``generate`` is the compiled path: one jitted prefill per prompt shape +
+    one jitted ``lax.scan`` decode per (num_new, temperature, sampled) combo.
+    ``generate_reference`` is the seed Python loop (one jitted call per
+    token), kept for equivalence tests and the throughput benchmark.
+    """
 
     def __init__(self, cfg: ModelCfg, params, max_len: int,
                  cache_dtype=jnp.float32):
         self.cfg, self.params, self.max_len = cfg, params, max_len
         self.cache_dtype = cache_dtype
         self._step = jax.jit(make_serve_step(cfg))
+        self._prefill = jax.jit(functools.partial(prefill, cfg))
+        self._loops: Dict[tuple, callable] = {}
 
+    # -- compiled path ------------------------------------------------------
     def generate(self, prompt_tokens, num_new: int, *, temperature: float = 0.0,
                  key: Optional[jax.Array] = None, frames=None):
+        """prompt_tokens: (B, S) int32 -> (B, num_new) generated tokens.
+
+        Requires S + num_new - 1 <= max_len (the cache length)."""
+        B, S = prompt_tokens.shape
+        if S + num_new - 1 > self.max_len:
+            raise ValueError(
+                f"prompt {S} + {num_new} new tokens exceeds max_len "
+                f"{self.max_len}")
+        cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
+        logits, cache = self._prefill(self.params, cache, prompt_tokens,
+                                      frames)
+        tok = sample_token(logits, temperature, key)
+        if num_new == 1:
+            return tok
+        loop = self._decode_loop(num_new, temperature, key is not None)
+        toks, _ = loop(self.params, cache, tok,
+                       key if key is not None else jax.random.PRNGKey(0))
+        return toks
+
+    def _decode_loop(self, num_new: int, temperature: float, sampled: bool):
+        """Build (and memoize) the scan-compiled decode loop.
+
+        The loop carries (token, cache) and emits into a preallocated
+        (num_new, B) buffer — ONE dispatch for the whole decode, with the
+        same key schedule as the reference loop (fold_in(key, i+1))."""
+        sig = (num_new, float(temperature), sampled)
+        if sig in self._loops:
+            return self._loops[sig]
+        cfg = self.cfg
+
+        def loop(params, cache, tok0, key):
+            def body(carry, i):
+                tok, cache = carry
+                logits, cache = model.decode_step(cfg, params, cache, tok)
+                k = jax.random.fold_in(key, i + 1) if sampled else None
+                nxt = sample_token(logits, temperature, k)
+                return (nxt, cache), tok[:, 0]
+
+            (_, cache), toks = jax.lax.scan(body, (tok0, cache),
+                                            jnp.arange(num_new))
+            return jnp.swapaxes(toks, 0, 1), cache
+
+        self._loops[sig] = jax.jit(loop)
+        return self._loops[sig]
+
+    # -- reference path (seed implementation) -------------------------------
+    def generate_reference(self, prompt_tokens, num_new: int, *,
+                           temperature: float = 0.0,
+                           key: Optional[jax.Array] = None, frames=None,
+                           jit_prefill: bool = True):
+        """The seed implementation: token-wise prefill + Python decode loop
+        with per-step dispatch.  Semantically identical to :meth:`generate`;
+        kept as the oracle/baseline.  ``jit_prefill=False`` reproduces the
+        seed exactly (eager per-token prefill — very slow; benchmark only).
+        """
         B = prompt_tokens.shape[0]
         cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
-        logits, cache = prefill(self.cfg, self.params, cache, prompt_tokens,
-                                frames=frames)
+        if jit_prefill:
+            logits, cache = prefill_tokenwise(self.cfg, self.params, cache,
+                                              prompt_tokens, frames=frames)
+        else:
+            if self.cfg.family == "encdec" and frames is not None:
+                cache = model.prefill_cross(self.cfg, self.params, cache,
+                                            frames)
+            logits = None
+            for t in range(prompt_tokens.shape[1]):
+                logits, cache = model.decode_step(
+                    self.cfg, self.params, cache, prompt_tokens[:, t:t + 1])
         out = []
-        tok = self._sample(logits, temperature, key, 0)
+        tok = sample_token(logits, temperature, key)
         for i in range(num_new):
             out.append(tok)
             logits, cache = self._step(self.params, cache, tok)
             key2 = None if key is None else jax.random.fold_in(key, i + 1)
-            tok = self._sample(logits, temperature, key2, i + 1)
+            tok = sample_token(logits, temperature, key2)
         return jnp.concatenate(out, axis=1)
 
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through the continuous-batching engine.
+
+    ``tokens`` accumulates generated ids (the prompt is not echoed); the
+    request is finished when EOS is sampled or ``max_new`` tokens exist."""
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+
+class SlotManager:
+    """Fixed-capacity slot allocator: which cache row belongs to which
+    request.  ``lengths[slot]`` tracks tokens written to that cache row
+    (prompt + decode writes); the engine retires a slot when it reaches the
+    cache length, so a request can never overrun its row."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self.active: Dict[int, Request] = {}
+        self.lengths = np.zeros((n_slots,), np.int64)   # tokens written so far
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc(self, req: Request, prompt_len: int) -> int:
+        slot = self._free.pop()
+        req.slot = slot
+        self.active[slot] = req
+        self.lengths[slot] = prompt_len
+        return slot
+
+    def release(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        req.slot = -1
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching: heterogeneous requests share ONE
+    jitted padded-batch decode step.
+
+    * ``submit`` queues a request; it is admitted as soon as a slot frees.
+    * admission runs a single-request single-pass prefill (jitted per prompt
+      length) and writes the resulting cache row into the request's slot —
+      the per-slot KV index keeps every slot's position independent.
+    * ``step`` advances ALL slots one token with one jitted call, harvests
+      tokens for active slots, retires finished sequences (EOS or length
+      budget) and back-fills freed slots from the queue.  Free slots ride
+      along as padding — their lanes compute garbage that is never read.
+    * ``run`` steps until queue and slots drain; returns {uid: tokens}.
+
+    Greedy when ``temperature <= 0``; otherwise softmax sampling with a
+    per-step folded key (shared across slots).
+    """
+
+    def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 8,
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, cache_dtype=jnp.float32,
+                 seed: int = 0):
+        if cfg.family in ("vlm", "encdec"):
+            raise NotImplementedError(
+                "continuous batching currently serves token-only families")
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.eos_id, self.temperature = eos_id, float(temperature)
+        self.cache_dtype = cache_dtype
+        self.cache = model.init_cache(cfg, n_slots, max_len, cache_dtype,
+                                      per_slot=True)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)   # last token per slot
+        self.slots = SlotManager(n_slots)
+        self.queue: collections.deque = collections.deque()
+        self.finished: List[Request] = []
+        self._uid = itertools.count()
+        self._key = jax.random.PRNGKey(seed)
+        self._clock = 0
+        self._prefills: Dict[int, callable] = {}
+        self._batch_step = jax.jit(self._make_batch_step())
+        self._write_slot = jax.jit(self._write_slot_impl)
+
+    # -- jitted pieces ------------------------------------------------------
+    def _make_batch_step(self):
+        cfg, temperature = self.cfg, self.temperature
+
+        def batch_step(params, cache, tok, key):
+            logits, cache = model.decode_step(cfg, params, cache, tok)
+            nxt = sample_token(logits, temperature,
+                               key if temperature > 0.0 else None)
+            return nxt.astype(jnp.int32), cache
+
+        return batch_step
+
+    def _prefill_one(self, prompt_len: int):
+        """Single-request prefill, jitted once per distinct prompt length
+        (exact-shape compilation; length bucketing is future work)."""
+        if prompt_len in self._prefills:
+            return self._prefills[prompt_len]
+        cfg, max_len, dtype = self.cfg, self.max_len, self.cache_dtype
+        temperature = self.temperature
+
+        def prefill_one(params, tokens, key):
+            cache = model.init_cache(cfg, 1, max_len, dtype, per_slot=True)
+            logits, cache = model.prefill(cfg, params, cache, tokens)
+            tok = sample_token(logits, temperature,
+                               key if temperature > 0.0 else None)
+            return tok.astype(jnp.int32), cache
+
+        self._prefills[prompt_len] = jax.jit(prefill_one)
+        return self._prefills[prompt_len]
+
     @staticmethod
-    def _sample(logits, temperature, key, i):
-        if temperature <= 0.0 or key is None:
-            return jnp.argmax(logits[:, -1:], axis=-1)
-        return jax.random.categorical(
-            key, logits[:, -1] / temperature, axis=-1)[:, None]
+    def _write_slot_impl(batch_cache, one_cache, slot):
+        """Scatter a single-request cache (batch axis 1, size 1) into row
+        ``slot`` of the slot-batched cache — resets that slot's KV index."""
+        return jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), slot, axis=1),
+            batch_cache, one_cache)
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(self, prompt, max_new: int) -> int:
+        """Queue a prompt ((S,) ints) for up to ``max_new`` generated tokens.
+        Returns the request uid (key into :meth:`run`'s result)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new - 1 > self.max_len:
+            raise ValueError(
+                f"prompt {prompt.size} + {max_new} new tokens exceeds "
+                f"max_len {self.max_len}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        req = Request(uid=next(self._uid), prompt=prompt, max_new=max_new)
+        self.queue.append(req)
+        self._admit()
+        return req.uid
+
+    def _admit(self) -> None:
+        """Move queued requests into free slots (prefill + slot write)."""
+        while self.queue and self.slots.free_slots:
+            req = self.queue.popleft()
+            slot = self.slots.alloc(req, len(req.prompt))
+            self._clock += 1
+            key = jax.random.fold_in(self._key, self._clock)
+            fn = self._prefill_one(len(req.prompt))
+            tok0, cache1 = fn(self.params, jnp.asarray(req.prompt)[None, :],
+                              key)
+            self.cache = self._write_slot(self.cache, cache1, slot)
+            self.tokens = self.tokens.at[slot].set(tok0[0])
+            self._emit(req, int(tok0[0, 0]))
+
+    def _emit(self, req: Request, token: int) -> None:
+        req.tokens.append(token)
+        done = (self.eos_id is not None and token == self.eos_id) \
+            or len(req.tokens) >= req.max_new \
+            or self.slots.lengths[req.slot] >= self.max_len  # cache row full
+        if done:
+            self.slots.release(req.slot)
+            self.finished.append(req)
+
+    def step(self) -> List[Request]:
+        """One padded-batch decode step; returns requests finished this step."""
+        if not self.slots.active:
+            self._admit()
+            return []
+        self._clock += 1
+        key = jax.random.fold_in(self._key, self._clock)
+        self.tokens, self.cache = self._batch_step(
+            self.params, self.cache, self.tokens, key)
+        emitted = np.asarray(self.tokens[:, 0])
+        before = len(self.finished)
+        for slot, req in list(self.slots.active.items()):
+            self.slots.lengths[slot] += 1
+            self._emit(req, int(emitted[slot]))
+        self._admit()
+        return self.finished[before:]
+
+    def run(self) -> Dict[int, List[int]]:
+        """Step until every queued/active request finishes.
+        Returns {uid: generated token list}."""
+        while self.slots.active or self.queue:
+            self.step()
+        out = {r.uid: r.tokens for r in self.finished}
+        self.finished = []
+        return out

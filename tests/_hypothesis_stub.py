@@ -1,0 +1,69 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (see conftest.py).
+
+The container image does not ship ``hypothesis`` and the tier-1 suite must
+collect (and meaningfully run) without optional deps.  This stub implements
+the tiny subset the tests use — ``given``, ``settings``, and the
+``integers`` / ``sampled_from`` strategies — by enumerating a deterministic
+sample of input combinations (seeded PRNG, capped example count) instead of
+random property search.  ``pip install hypothesis`` (declared in
+pyproject.toml) replaces it transparently with the real library.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+
+_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a deterministic list of candidate values."""
+
+    def __init__(self, values):
+        self.values = list(values)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    """Boundary values plus a few seeded interior points."""
+    rng = random.Random((min_value, max_value).__hash__())
+    vals = {min_value, max_value, (min_value + max_value) // 2}
+    span = max_value - min_value
+    if span > 4:
+        vals.update(min_value + rng.randrange(span) for _ in range(3))
+    return _Strategy(sorted(vals))
+
+
+def sampled_from(seq) -> _Strategy:
+    return _Strategy(seq)
+
+
+def settings(*args, **kwargs):
+    """Accepted and ignored (decorator passthrough)."""
+    if args and callable(args[0]):
+        return args[0]
+    return lambda f: f
+
+
+def given(**strategies):
+    """Run the test over a deterministic cross-product sample (capped)."""
+    names = sorted(strategies)
+
+    def deco(f):
+        grids = [strategies[n].values for n in names]
+        combos = list(itertools.islice(itertools.product(*grids),
+                                       _MAX_EXAMPLES * 50))
+        rng = random.Random(0)
+        if len(combos) > _MAX_EXAMPLES:
+            combos = rng.sample(combos, _MAX_EXAMPLES)
+
+        # NOTE: deliberately no functools.wraps — it would copy __wrapped__
+        # and pytest would then see the strategy parameters as fixtures.
+        def wrapper():
+            for combo in combos:
+                f(**dict(zip(names, combo)))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        return wrapper
+
+    return deco

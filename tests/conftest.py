@@ -1,0 +1,40 @@
+"""Tier-1 test configuration.
+
+The suite must collect on a bare container (jax + pytest only).  When the
+real ``hypothesis`` library is missing, install the deterministic stub from
+``tests/_hypothesis_stub.py`` under the ``hypothesis`` /
+``hypothesis.strategies`` module names BEFORE test modules import it.
+"""
+import importlib.util
+import os
+import sys
+
+
+def _install_hypothesis_stub() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+    import types
+
+    # load relative to this file — works for both `python -m pytest` and a
+    # bare `pytest` (where the repo root is not on sys.path)
+    spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py"))
+    stub = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(stub)
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = stub.given
+    mod.settings = stub.settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = stub.integers
+    strategies.sampled_from = stub.sampled_from
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+_install_hypothesis_stub()

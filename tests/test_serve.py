@@ -1,11 +1,14 @@
-"""Serving engine: prefill/decode equivalence, greedy determinism."""
+"""Serving engine: prefill/decode equivalence, greedy determinism, scan
+decode vs Python loop, and continuous-batching slot lifecycle."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.models import model
-from repro.serve import Engine, make_serve_step, prefill
+from repro.serve import (ContinuousBatchingEngine, Engine, make_serve_step,
+                         prefill, prefill_tokenwise)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -21,6 +24,32 @@ def test_prefill_then_decode_matches_forward():
                                atol=2e-3)
 
 
+@pytest.mark.parametrize("arch", ["qwen3_0_6b", "mamba2_780m", "hymba_1_5b"])
+def test_single_pass_prefill_matches_tokenwise(arch):
+    """The tentpole equivalence: ONE full-sequence forward with cache writes
+    must reproduce the seed's token-wise loop — logits AND every cache leaf
+    (KV contents, write indices, SSM conv tail + recurrent state)."""
+    cfg = configs.get(arch, smoke=True)
+    p = model.init_params(cfg, KEY)
+    B, S, M = 2, 6, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    c_ref = model.init_cache(cfg, B, M, dtype=jnp.float32)
+    lo_ref, c_ref = prefill_tokenwise(cfg, p, c_ref, toks)
+    c_new = model.init_cache(cfg, B, M, dtype=jnp.float32)
+    lo_new, c_new = prefill(cfg, p, c_new, toks)
+    np.testing.assert_allclose(np.asarray(lo_new[:, -1]),
+                               np.asarray(lo_ref[:, -1]), atol=3e-3)
+    for a, b in zip(jax.tree.leaves(c_ref), jax.tree.leaves(c_new)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-3, rtol=1e-2)
+    # decode continues identically from either cache
+    tok = jnp.argmax(lo_new[:, -1:], axis=-1)
+    d_ref, _ = model.decode_step(cfg, p, c_ref, tok)
+    d_new, _ = model.decode_step(cfg, p, c_new, tok)
+    np.testing.assert_allclose(np.asarray(d_new), np.asarray(d_ref), atol=3e-3)
+
+
 def test_greedy_generation_deterministic():
     cfg = configs.get("opt125m", smoke=True)
     p = model.init_params(cfg, KEY)
@@ -30,6 +59,20 @@ def test_greedy_generation_deterministic():
     b = eng.generate(prompts, 8)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert a.shape == (2, 8)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_scan_decode_matches_python_loop(temperature):
+    """The jitted lax.scan decode must emit exactly what the seed Python
+    loop emits (same key schedule, greedy and sampled)."""
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    p = model.init_params(cfg, KEY)
+    eng = Engine(cfg, p, max_len=24)
+    prompts = jax.random.randint(KEY, (2, 5), 0, cfg.vocab_size)
+    key = KEY if temperature > 0 else None
+    a = eng.generate(prompts, 10, temperature=temperature, key=key)
+    b = eng.generate_reference(prompts, 10, temperature=temperature, key=key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_serve_step_signature_decode_cells():
@@ -42,3 +85,82 @@ def test_serve_step_signature_decode_cells():
     logits, cache2 = step(p, cache, tok)
     assert logits.shape == (2, 1, cfg.vocab_size)
     assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_windowed_prompt_longer_than_window():
+    """Single-pass prefill with prompt > sliding window: attention must
+    attend the full in-flight K/V and persist only the last `window` tokens
+    at their ring slots — matching the seed's token-wise ring writes."""
+    cfg = configs.get("hymba_1_5b", smoke=True)
+    assert cfg.window is not None
+    p = model.init_params(cfg, KEY)
+    eng = Engine(cfg, p, max_len=32)
+    prompts = jax.random.randint(KEY, (2, cfg.window + 4), 0, cfg.vocab_size)
+    a = eng.generate(prompts, 6)
+    b = eng.generate_reference(prompts, 6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-slot (continuous batching) variant of the same ring layout
+    cbe = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=32)
+    uids = [cbe.submit(np.asarray(prompts[i]), 6) for i in range(2)]
+    res = cbe.run()
+    for i, u in enumerate(uids):
+        np.testing.assert_array_equal(np.asarray(res[u]), np.asarray(a[i]))
+
+
+def test_continuous_batching_matches_engine():
+    """Heterogeneous requests through the shared padded step must produce the
+    same greedy tokens as independent batched generation."""
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    p = model.init_params(cfg, KEY)
+    eng = Engine(cfg, p, max_len=32)
+    cbe = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=32)
+    pa = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, cfg.vocab_size)
+    pb = jax.random.randint(jax.random.PRNGKey(2), (1, 7), 0, cfg.vocab_size)
+    ua = cbe.submit(np.asarray(pa[0]), 6)
+    ub = cbe.submit(np.asarray(pb[0]), 6)
+    res = cbe.run()
+    np.testing.assert_array_equal(np.asarray(res[ua]),
+                                  np.asarray(eng.generate(pa, 6)[0]))
+    np.testing.assert_array_equal(np.asarray(res[ub]),
+                                  np.asarray(eng.generate(pb, 6)[0]))
+
+
+def test_slot_retirement_frees_capacity():
+    """More requests than slots: finished sequences must retire and queued
+    requests must be admitted into the freed slots until the queue drains."""
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    p = model.init_params(cfg, KEY)
+    cbe = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=24)
+    prompts = jax.random.randint(KEY, (5, 4), 0, cfg.vocab_size)
+    uids = [cbe.submit(np.asarray(prompts[i]), 3 + i % 3) for i in range(5)]
+    assert cbe.slots.free_slots == 0 and len(cbe.queue) == 3
+    max_active = 0
+    results = {}
+    while cbe.slots.active or cbe.queue:
+        max_active = max(max_active, len(cbe.slots.active))
+        for req in cbe.step():
+            results[req.uid] = req.tokens
+    results.update({r.uid: r.tokens for r in cbe.finished})
+    assert max_active <= 2
+    assert set(results) == set(uids)
+    for i, u in enumerate(uids):
+        assert len(results[u]) == 3 + i % 3
+    # all slots returned to the pool
+    assert cbe.slots.free_slots == 2 and not cbe.slots.active
+
+
+def test_eos_retires_early():
+    """A sampled EOS must end the request before its length budget."""
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    p = model.init_params(cfg, KEY)
+    prompts = jax.random.randint(KEY, (1, 4), 0, cfg.vocab_size)
+    eng = Engine(cfg, p, max_len=32)
+    greedy = np.asarray(eng.generate(prompts, 8)[0])
+    eos = int(greedy[2])              # a token the model will greedily emit
+    first_hit = int(np.flatnonzero(greedy == eos)[0])
+    cbe = ContinuousBatchingEngine(cfg, p, n_slots=1, max_len=32, eos_id=eos)
+    uid = cbe.submit(np.asarray(prompts[0]), 8)
+    res = cbe.run()
+    assert res[uid][-1] == eos
+    # stopped at the first EOS occurrence, not the 8-token budget
+    assert len(res[uid]) == first_hit + 1 < 8
