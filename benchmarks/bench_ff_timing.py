@@ -3,15 +3,25 @@ DENSE vs DYAD variants, forward and forward+backward, at OPT-125m and
 OPT-350m ff dimensions.
 
 CPU wall-times are not TPU times — the deliverable (as in the paper) is the
-RATIO column.  FLOP-derived speedup bounds are emitted alongside.
+RATIO column.  FLOP-derived speedup bounds are emitted alongside, and each
+forward record carries loop-aware HLO FLOP/byte counts so the regression
+gate can print roofline-annotated tables.
+
+The ``kernel_*`` cells exercise the Pallas-kernel autotuner on a
+non-default shape (d_out not a multiple of the hardcoded 256 tile): the
+``_default`` cell times the hardcoded blocks, the ``_tuned`` cell times
+whatever ``repro.perf.autotune`` picked, demonstrating that tuned tiles
+are real and at least as fast.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
+from repro import perf
 from repro.core import dyad, linear
+from repro.perf.autotune import DEFAULT_BLOCKS, autotune_dyad
+from repro.perf.record import hlo_metrics
 
 TOKENS = 2048           # minibatch tokens for timing (matmul-bound on CPU)
 
@@ -28,6 +38,11 @@ VARIANTS = [
     ("dyad_it_4_cat", dyad.DyadSpec(n_dyad=4, variant="it", cat=True)),
 ]
 
+# autotune demo shape: B typical of a decode microbatch; d_out=384 has no
+# 256-divisor, so the hardcoded default tiles the o-axis in two 192-wide
+# columns where a tuned 384-wide tile needs one grid step.
+KERNEL_SHAPE = (64, 2, 512, 384)       # (B, n_dyad, d_in, d_out)
+
 
 def _ff_dense(p, x):
     h = jax.nn.relu(linear.apply(p["up"], x))
@@ -39,6 +54,32 @@ def _ff_dyad(p, x, spec, spec_down):
     return dyad.apply(p["down"], h, spec_down)
 
 
+def _kernel_autotune_cells():
+    from repro.kernels.dyad_mm import dyad_mm_blocks
+    from repro.kernels.ops import _interpret
+
+    B, n, d_in, d_out = KERNEL_SHAPE
+    key = jax.random.PRNGKey(0)
+    x1 = jax.random.normal(key, (B, n, d_in))
+    x2 = jax.random.normal(jax.random.fold_in(key, 1), (B, n, d_in))
+    w1 = jax.random.normal(jax.random.fold_in(key, 2), (n, d_out, d_in))
+    w2 = jax.random.normal(jax.random.fold_in(key, 3), (n, d_out, d_in))
+    interpret = _interpret()
+
+    t_default = time_fn(
+        lambda: dyad_mm_blocks(x1, x2, w1, w2, interpret=interpret,
+                               **DEFAULT_BLOCKS), iters=3, warmup=1)
+    tuned, _ = autotune_dyad("dyad_mm_blocks", B, n, d_in, d_out, iters=3)
+    t_tuned = time_fn(
+        lambda: dyad_mm_blocks(x1, x2, w1, w2, interpret=interpret,
+                               **tuned), iters=3, warmup=1)
+    tag = f"kernel_dyad_it_B{B}_n{n}_k{d_in}_o{d_out}"
+    emit(f"{tag}_default", t_default, shape=KERNEL_SHAPE, **DEFAULT_BLOCKS)
+    emit(f"{tag}_tuned", t_tuned, shape=KERNEL_SHAPE,
+         tuned_speedup=round(t_default / t_tuned, 3), **tuned)
+
+
+@perf.register("ff_timing")
 def run():
     key = jax.random.PRNGKey(0)
     for model_name, (d, ff) in DIMS.items():
@@ -49,8 +90,11 @@ def run():
         bwd = jax.jit(jax.grad(lambda p, x: _ff_dense(p, x).sum()))
         t_fwd_dense = time_fn(fwd, pd, x)
         t_tot_dense = t_fwd_dense + time_fn(bwd, pd, x)
-        emit(f"ff_{model_name}_dense_fwd", t_fwd_dense, "ratio=1.00")
-        emit(f"ff_{model_name}_dense_total", t_tot_dense, "ratio=1.00")
+        roof = hlo_metrics(fwd, pd, x)
+        emit(f"ff_{model_name}_dense_fwd", t_fwd_dense,
+             shape=(TOKENS, d, ff), ratio=1.00, **roof)
+        emit(f"ff_{model_name}_dense_total", t_tot_dense,
+             shape=(TOKENS, d, ff), ratio=1.00)
 
         for vname, spec in VARIANTS:
             sd = dyad.DyadSpec(n_dyad=spec.n_dyad, variant=spec.variant,
@@ -63,10 +107,15 @@ def run():
             t_fwd = time_fn(f, pv, x)
             t_tot = t_fwd + time_fn(g, pv, x)
             flop_bound = spec.n_dyad / 2
-            emit(f"ff_{model_name}_{vname}_fwd", t_fwd,
-                 f"ratio={t_fwd_dense / t_fwd:.2f};flop_bound={flop_bound:.1f}x")
+            roof = hlo_metrics(f, pv, x)
+            emit(f"ff_{model_name}_{vname}_fwd", t_fwd, shape=(TOKENS, d, ff),
+                 ratio=round(t_fwd_dense / t_fwd, 2),
+                 flop_bound=flop_bound, **roof)
             emit(f"ff_{model_name}_{vname}_total", t_tot,
-                 f"ratio={t_tot_dense / t_tot:.2f}")
+                 shape=(TOKENS, d, ff),
+                 ratio=round(t_tot_dense / t_tot, 2))
+
+    _kernel_autotune_cells()
 
 
 if __name__ == "__main__":

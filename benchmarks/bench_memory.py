@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import emit
-from repro import configs
+from repro import configs, perf
 from repro.checkpoint.manager import flatten_with_paths
 from repro.optim import AdamW, schedule
 from repro.train import init_train_state, make_train_step
@@ -40,6 +40,7 @@ def _stats(linear_spec: str):
     return total, total - emb, ckpt_mb, train_mb
 
 
+@perf.register("memory")
 def run():
     base = None
     for spec in ("dense", "dyad_it_4", "dyad_ot_4", "dyad_dt_4", "dyad_it_8"):
@@ -48,8 +49,8 @@ def run():
             base = train_mb
         drop = 100.0 * (1 - train_mb / base)
         emit(f"mem_opt125m_{spec}", 0.0,
-             f"params={total};nonemb={nonemb};ckpt_mb={ckpt_mb:.0f};"
-             f"train_mb={train_mb:.0f};gpu_mem_drop_pct={drop:.1f}")
+             params=total, nonemb=nonemb, ckpt_mb=round(ckpt_mb),
+             train_mb=round(train_mb), gpu_mem_drop_pct=round(drop, 1))
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro import perf
 from repro.core import dyad, linear
 from repro.data import SyntheticClassification
 
@@ -62,13 +63,14 @@ def _train_eval(use_dyad):
     return acc, t
 
 
+@perf.register("mnist")
 def run():
     acc_d, t_d = _train_eval(False)
     acc_y, t_y = _train_eval(True)
-    emit("mnist_dense", t_d, f"acc={acc_d:.4f};ratio=1.00")
-    emit("mnist_dyad_it4", t_y,
-         f"acc={acc_y:.4f};ratio={t_d / t_y:.2f};"
-         f"acc_parity={'PASS' if acc_y >= 0.95 * acc_d else 'FAIL'}")
+    emit("mnist_dense", t_d, acc=round(acc_d, 4), ratio=1.00)
+    emit("mnist_dyad_it4", t_y, acc=round(acc_y, 4),
+         ratio=round(t_d / t_y, 2),
+         acc_parity="PASS" if acc_y >= 0.95 * acc_d else "FAIL")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import perf
 from repro.core import factory
 from repro.data import SyntheticLM
 from repro.models.config import ModelCfg
@@ -34,19 +35,21 @@ def _pretrain(linear_cfg, seed=0):
     return loss
 
 
+@perf.register("quality")
 def run():
     floor = float(np.log(64))
     dense = _pretrain(factory.DENSE)
     gain_dense = floor - dense
-    emit("quality_dense_loss", 0.0, f"loss={dense:.4f};gain={gain_dense:.3f}")
+    emit("quality_dense_loss", 0.0, loss=round(dense, 4),
+         gain=round(gain_dense, 3))
     for spec in ("dyad_it_4", "dyad_ot_4", "dyad_dt_4", "dyad_it_8"):
         from repro.configs import linear_cfg
         loss = _pretrain(linear_cfg(spec))
         gain = floor - loss
         rel = gain / gain_dense
         verdict = "PASS" if rel >= 0.90 else "FAIL"
-        emit(f"quality_{spec}_loss", 0.0,
-             f"loss={loss:.4f};rel_gain={rel:.3f};ge90pct={verdict}")
+        emit(f"quality_{spec}_loss", 0.0, loss=round(loss, 4),
+             rel_gain=round(rel, 3), ge90pct=verdict)
 
 
 if __name__ == "__main__":

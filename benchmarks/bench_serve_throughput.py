@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro import configs
+from repro import configs, perf
 from repro.models import model
 from repro.serve import Engine, prefill_tokenwise
 
@@ -66,11 +66,11 @@ def _bench_linear(tag: str, linear) -> None:
 
         t_new = _time(run_single)
         t_old = _time(run_tokenwise)
-        tps = B * S / t_new
-        emit(f"{tag}_prefill_b{B}_s{S}_single", t_new * 1e6,
-             f"{tps:.0f} tok/s; {t_old / t_new:.1f}x vs tokenwise")
-        emit(f"{tag}_prefill_b{B}_s{S}_tokenwise", t_old * 1e6,
-             f"{B * S / t_old:.0f} tok/s")
+        emit(f"{tag}_prefill_b{B}_s{S}_single", t_new * 1e6, shape=(B, S),
+             tok_s=round(B * S / t_new), speedup_vs_tokenwise=round(
+                 t_old / t_new, 1))
+        emit(f"{tag}_prefill_b{B}_s{S}_tokenwise", t_old * 1e6, shape=(B, S),
+             tok_s=round(B * S / t_old))
 
     # -- decode: scan loop vs Python loop -----------------------------------
     for B, N in DECODE_GRID:
@@ -79,11 +79,11 @@ def _bench_linear(tag: str, linear) -> None:
                                      cfg.vocab_size)
         t_new = _time(lambda: engine.generate(prompts, N))
         t_old = _time(lambda: engine.generate_reference(prompts, N))
-        speedup = t_old / t_new
-        emit(f"{tag}_decode_b{B}_n{N}_scan", t_new * 1e6,
-             f"{B * N / t_new:.0f} tok/s; {speedup:.1f}x vs jitted-loop")
-        emit(f"{tag}_decode_b{B}_n{N}_loop", t_old * 1e6,
-             f"{B * N / t_old:.0f} tok/s")
+        emit(f"{tag}_decode_b{B}_n{N}_scan", t_new * 1e6, shape=(B, N),
+             tok_s=round(B * N / t_new), speedup_vs_loop=round(
+                 t_old / t_new, 1))
+        emit(f"{tag}_decode_b{B}_n{N}_loop", t_old * 1e6, shape=(B, N),
+             tok_s=round(B * N / t_old))
 
     # -- acceptance cell: end-to-end generate vs the SEED Engine.generate ---
     # (token-wise EAGER prefill + per-token Python decode dispatch).  One
@@ -96,11 +96,12 @@ def _bench_linear(tag: str, linear) -> None:
     t_seed = _time(lambda: engine.generate_reference(prompts, N,
                                                      jit_prefill=False),
                    iters=1, warmup=0)
-    emit(f"{tag}_generate_b{B}_n{N}_seed", t_seed * 1e6,
-         f"{B * N / t_seed:.0f} tok/s; scan engine {t_seed / t_new:.1f}x "
-         "faster end-to-end")
+    emit(f"{tag}_generate_b{B}_n{N}_seed", t_seed * 1e6, shape=(B, N),
+         tok_s=round(B * N / t_seed),
+         scan_engine_speedup=round(t_seed / t_new, 1))
 
 
+@perf.register("serve_throughput")
 def run() -> None:
     _bench_linear("dense", configs.DENSE)
     _bench_linear("dyad", configs.DYAD_DEFAULT)

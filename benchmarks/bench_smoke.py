@@ -1,0 +1,55 @@
+"""Tiny CI suite (< 1 min on a cold GitHub runner).
+
+One dense-vs-DYAD ff cell with hlo_stats FLOP/byte counts (so the gate's
+roofline columns are exercised end-to-end), plus an autotune sweep over a
+deliberately small candidate space to keep the block cache and the
+``BENCH_smoke.json`` trajectory alive in CI.  This is the suite the
+``bench-smoke`` CI job runs and gates with ``python -m repro.perf.check``.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro import perf
+from repro.core import dyad, linear
+from repro.perf.autotune import autotune_dyad
+from repro.perf.record import hlo_metrics
+
+TOKENS = 256
+D, FF = 256, 1024
+KERNEL_SHAPE = (32, 2, 128, 128)      # (B, n_dyad, d_in, d_out) — tiny
+
+
+@perf.register("smoke")
+def run():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (TOKENS, D))
+    spec = dyad.DyadSpec(n_dyad=4, variant="it")
+
+    pd = {"up": linear.init(key, D, FF), "down": linear.init(key, FF, D)}
+    pv = {"up": dyad.init(key, D, FF, spec),
+          "down": dyad.init(key, FF, D, spec)}
+
+    dense = jax.jit(lambda p, x: linear.apply(
+        p["down"], jax.nn.relu(linear.apply(p["up"], x))))
+    dy = jax.jit(lambda p, x: dyad.apply(
+        p["down"], jax.nn.relu(dyad.apply(p["up"], x, spec)), spec))
+
+    td = time_fn(dense, pd, x, iters=3)
+    tv = time_fn(dy, pv, x, iters=3)
+    roof_d = hlo_metrics(dense, pd, x)
+    roof_y = hlo_metrics(dy, pv, x)
+    emit("smoke_ff_dense_fwd", td, shape=(TOKENS, D, FF), ratio=1.00,
+         **roof_d)
+    emit("smoke_ff_dyad_it4_fwd", tv, shape=(TOKENS, D, FF),
+         ratio=round(td / tv, 2), **roof_y)
+
+    B, n, d_in, d_out = KERNEL_SHAPE
+    blocks, us = autotune_dyad("dyad_mm_blocks", B, n, d_in, d_out,
+                               iters=2, force=True)
+    emit("smoke_kernel_autotune", us, shape=KERNEL_SHAPE, **blocks)
+
+
+if __name__ == "__main__":
+    run()

@@ -9,12 +9,14 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import emit, time_fn
+from repro import perf
 from repro.core import dyad, linear
 
 TOKENS = 256
 WIDTHS = [768, 1024, 2048, 4096]
 
 
+@perf.register("width_sweep")
 def run():
     key = jax.random.PRNGKey(0)
     for d in WIDTHS:
@@ -31,9 +33,9 @@ def run():
         dy = jax.jit(lambda p, x: dyad.apply(
             p["down"], jax.nn.relu(dyad.apply(p["up"], x, spec)), spec))
         tv = time_fn(dy, pv, x, iters=3)
-        emit(f"width_{d}_dense_fwd", td, "ratio=1.00")
-        emit(f"width_{d}_dyad_it4_fwd", tv,
-             f"ratio={td / tv:.2f};flop_bound=2.0x")
+        emit(f"width_{d}_dense_fwd", td, shape=(TOKENS, d, ff), ratio=1.00)
+        emit(f"width_{d}_dyad_it4_fwd", tv, shape=(TOKENS, d, ff),
+             ratio=round(td / tv, 2), flop_bound=2.0)
 
 
 if __name__ == "__main__":

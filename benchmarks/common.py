@@ -1,23 +1,47 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + record emission.
+
+``emit`` keeps the seed's ``name,us_per_call,derived`` CSV on stdout AND
+appends a typed :class:`repro.perf.record.BenchResult` to the active
+recorder when the suite runs under ``benchmarks/run.py`` (which wraps each
+suite in ``repro.perf.record.recording`` and writes ``BENCH_<suite>.json``).
+Structured metrics are passed as keyword arguments; the legacy ``derived``
+string (``k=v;k=v``) is parsed into metrics for callers not yet converted.
+"""
 from __future__ import annotations
 
-import time
+from typing import Optional, Sequence
 
-import jax
+from repro.perf.record import time_us
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall-time per call in microseconds (jit'd fn)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    """Median wall-time per call in microseconds (jit'd fn) — the shared
+    timer from repro.perf.record, so suites and the autotuner measure
+    identically."""
+    return time_us(fn, *args, iters=iters, warmup=warmup)
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
-    print(f"{name},{us_per_call:.1f},{derived}")
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         shape: Optional[Sequence[int]] = None, dtype: str = "float32",
+         **metrics):
+    from repro.perf.record import current_recorder
+
+    merged = {**_parse_derived(derived), **metrics}
+    shown = derived or ";".join(f"{k}={v}" for k, v in metrics.items())
+    print(f"{name},{us_per_call:.1f},{shown}")
+    rec = current_recorder()
+    if rec is not None:
+        rec.add(name, us_per_call, shape=shape, dtype=dtype, **merged)

@@ -1,52 +1,80 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one registered suite per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Mapping to the paper:
+Each suite prints ``name,us_per_call,derived`` CSV (the seed contract) and
+writes a machine-readable ``BENCH_<suite>.json`` at the repo root — the
+performance trajectory that ``python -m repro.perf.check`` gates against
+the last committed baseline.  Mapping to the paper:
 
-* bench_ff_timing   — Tables 1, 5, 10 (ff time, DENSE vs DYAD variants) and
-                      §3.4.3 (the -CAT variant)
-* bench_quality     — Tables 2, 3 (quality parity; offline stand-in stream)
-* bench_memory      — Table 11 (params / checkpoint / in-training memory)
-* bench_width_sweep — Figure 6 (speedup vs model width)
-* bench_mnist       — §3.4.5 (vision probe on CPU)
-* bench_serve_throughput — beyond-paper: end-to-end serving tokens/sec
-                      (single-pass prefill + scan decode vs the seed loops)
+* ff_timing        — Tables 1, 5, 10 (ff time, DENSE vs DYAD variants),
+                     §3.4.3 (-CAT), plus the fused-kernel autotune cells
+* quality          — Tables 2, 3 (quality parity; offline stand-in stream)
+* memory           — Table 11 (params / checkpoint / in-training memory)
+* width_sweep      — Figure 6 (speedup vs model width)
+* mnist            — §3.4.5 (vision probe on CPU)
+* serve_throughput — beyond-paper: end-to-end serving tokens/sec
+* smoke            — tiny CI suite (< 1 min): one dense-vs-dyad cell plus
+                     an autotune cache exercise
 
 Roofline terms (EXPERIMENTS §Roofline) come from the dry-run
 (``python -m repro.launch.dryrun``), which needs the 512-device env and is
-therefore not run from here.
+therefore not run from here; per-record FLOP/byte counts are attached by
+the suites via ``repro.perf.record.hlo_metrics``.
+
+    python benchmarks/run.py --suite ff_timing
+    python benchmarks/run.py                       # every suite
+    python -m repro.perf.check                     # gate vs committed JSON
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 
 # allow `python benchmarks/run.py` from the repo root (the documented form):
 # the `benchmarks` package lives next to this file's parent directory.
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
 
 
-def main() -> None:
-    from benchmarks import (bench_ff_timing, bench_memory, bench_mnist,
+def main(argv=None) -> int:
+    from repro.perf import registry
+
+    # importing the suite modules registers them (repro.perf.register)
+    from benchmarks import (bench_ff_timing, bench_memory, bench_mnist,  # noqa: F401
                             bench_quality, bench_serve_throughput,
-                            bench_width_sweep)
+                            bench_smoke, bench_width_sweep)
 
-    suites = {
-        "ff_timing": bench_ff_timing.run,
-        "quality": bench_quality.run,
-        "memory": bench_memory.run,
-        "width_sweep": bench_width_sweep.run,
-        "mnist": bench_mnist.run,
-        "serve_throughput": bench_serve_throughput.run,
-    }
-    wanted = sys.argv[1:] or list(suites)
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--suite", action="append", default=None,
+                   help="suite to run (repeatable; default: all)")
+    p.add_argument("--out-dir", default=_ROOT,
+                   help="where BENCH_<suite>.json is written "
+                        "(default: repo root)")
+    p.add_argument("--no-json", action="store_true",
+                   help="print CSV only, skip BENCH_<suite>.json")
+    p.add_argument("--list", action="store_true",
+                   help="list registered suites and exit")
+    p.add_argument("legacy_suites", nargs="*",
+                   help="positional suite names (seed-compatible form)")
+    args = p.parse_args(argv)
+
+    if args.list:
+        print("\n".join(registry.available_suites()))
+        return 0
+
+    wanted = (args.suite or []) + args.legacy_suites
+    wanted = wanted or registry.available_suites()
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
-        suites[name]()
-        print(f"# suite {name} done in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+        rec = registry.run_suite(name, out_dir=args.out_dir,
+                                 write=not args.no_json)
+        note = "" if args.no_json else f" -> {rec.path}"
+        print(f"# suite {name} done in {time.time() - t0:.1f}s"
+              f" ({len(rec.results)} records){note}", file=sys.stderr)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

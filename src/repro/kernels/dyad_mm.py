@@ -15,9 +15,20 @@ so every tile the kernel streams HBM->VMEM is contiguous and 128-aligned.
 Grid: ``(n_dyad, B/bB, d_out/bO, d_in/bK)`` — the k axis is innermost so the
 accumulator tile is revisited on consecutive steps; block=g, batch and out
 tiles are embarrassingly parallel.
+
+Tile selection
+--------------
+``block_b/block_o/block_k`` default to the autotuned sizes for this
+``(shape, dtype, backend)`` key (:func:`repro.perf.autotune.get_tuned_blocks`;
+falls back to 256/256/512 when the shape was never tuned).  Tiles are then
+*planned* per axis: a dimension whose largest divisor under the requested
+block is degenerate (prime or odd dims used to collapse to 1-wide tiles and
+a catastrophic grid) is zero-padded up to a tile-unit multiple instead —
+zero rows/columns contribute nothing and are sliced off the output.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -29,12 +40,87 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
+# minimal healthy tile per axis: sublane granularity on the batch axis,
+# lane granularity on the feature axes (fp32 native tile is (8, 128))
+_UNIT_B = 8
+_UNIT_FEAT = 128
+
 
 def _largest_divisor(dim: int, target: int) -> int:
     d = min(dim, target)
     while dim % d:
         d -= 1
     return d
+
+
+def _plan_axis(dim: int, block: int, unit: int):
+    """(tile, padded_dim) for one grid axis.
+
+    Healthy case: the largest divisor of ``dim`` under ``block`` is at least
+    one tile unit (or the whole axis) — use it, no padding.  Degenerate case
+    (prime/odd dims whose best divisor is tiny): round the axis up to a
+    multiple of the unit so a real tile exists; the caller zero-pads."""
+    u = max(min(unit, block), 1)
+    d = _largest_divisor(dim, block)
+    if d >= min(u, dim):
+        return d, dim
+    padded = -(-dim // u) * u
+    return _largest_divisor(padded, block), padded
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Concrete grid tiling for one fused-kernel invocation."""
+
+    bB: int
+    bO: int
+    bK: int
+    padded_b: int
+    padded_o: int
+    padded_k: int
+
+    @property
+    def grid_steps(self) -> int:
+        return ((self.padded_b // self.bB) * (self.padded_o // self.bO)
+                * (self.padded_k // self.bK))
+
+
+def plan_tiles(B: int, d_out: int, d_in: int,
+               block_b: int, block_o: int, block_k: int) -> TilePlan:
+    bB, pb = _plan_axis(B, block_b, _UNIT_B)
+    bO, po = _plan_axis(d_out, block_o, _UNIT_FEAT)
+    bK, pk = _plan_axis(d_in, block_k, _UNIT_FEAT)
+    return TilePlan(bB=bB, bO=bO, bK=bK,
+                    padded_b=pb, padded_o=po, padded_k=pk)
+
+
+def resolve_blocks(op: str, B: int, n: int, d_in: int, d_out: int, dtype,
+                   block_b=None, block_o=None, block_k=None):
+    """Fill unspecified block sizes from the autotune cache (explicit
+    arguments always win).  Runs at trace time — shapes are concrete."""
+    if block_b is None or block_o is None or block_k is None:
+        from repro.perf.autotune import get_tuned_blocks
+
+        tuned = get_tuned_blocks(op, B, n, d_in, d_out,
+                                 str(jnp.dtype(dtype)))
+        block_b = tuned["block_b"] if block_b is None else block_b
+        block_o = tuned["block_o"] if block_o is None else block_o
+        block_k = tuned["block_k"] if block_k is None else block_k
+    return block_b, block_o, block_k
+
+
+def _pad_inputs(plan: TilePlan, x1, x2, w1, w2):
+    B, _, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    db, do, dk = (plan.padded_b - B, plan.padded_o - d_out,
+                  plan.padded_k - d_in)
+    if db or dk:
+        x1 = jnp.pad(x1, ((0, db), (0, 0), (0, dk)))
+        x2 = jnp.pad(x2, ((0, db), (0, 0), (0, dk)))
+    if do or dk:
+        w1 = jnp.pad(w1, ((0, 0), (0, do), (0, dk)))
+        w2 = jnp.pad(w2, ((0, 0), (0, do), (0, dk)))
+    return x1, x2, w1, w2
 
 
 def _dyad_kernel(x1_ref, x2_ref, w1_ref, w2_ref, o_ref, acc_ref, *, nk: int):
@@ -85,25 +171,12 @@ def _dyad_kernel_two(x1_ref, x2_ref, w1_ref, w2_ref, o1_ref, o2_ref,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_o", "block_k", "interpret")
+    jax.jit, static_argnames=("bB", "bO", "bK", "interpret")
 )
-def dyad_mm_blocks_two(
-    x1: jax.Array,
-    x2: jax.Array,
-    w1: jax.Array,
-    w2: jax.Array,
-    *,
-    block_b: int = 256,
-    block_o: int = 256,
-    block_k: int = 512,
-    interpret: bool = False,
-):
-    """As :func:`dyad_mm_blocks` but returns (z1, z2) separately (OT/DT)."""
+def _dyad_mm_two_impl(x1, x2, w1, w2, *, bB: int, bO: int, bK: int,
+                      interpret: bool):
     B, n, d_in = x1.shape
     _, d_out, _ = w1.shape
-    bB = _largest_divisor(B, block_b)
-    bO = _largest_divisor(d_out, block_o)
-    bK = _largest_divisor(d_in, block_k)
     nk = d_in // bK
     grid = (n, B // bB, d_out // bO, nk)
 
@@ -130,30 +203,12 @@ def dyad_mm_blocks_two(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_o", "block_k", "interpret")
+    jax.jit, static_argnames=("bB", "bO", "bK", "interpret")
 )
-def dyad_mm_blocks(
-    x1: jax.Array,
-    x2: jax.Array,
-    w1: jax.Array,
-    w2: jax.Array,
-    *,
-    block_b: int = 256,
-    block_o: int = 256,
-    block_k: int = 512,
-    interpret: bool = False,
-) -> jax.Array:
-    """Fused dual-bmm over per-block views.
-
-    x1, x2: (B, n_dyad, d_in) — block-contiguous / permuted input views.
-    w1, w2: (n_dyad, d_out, d_in).
-    Returns (B, n_dyad, d_out), dtype of x1.
-    """
+def _dyad_mm_impl(x1, x2, w1, w2, *, bB: int, bO: int, bK: int,
+                  interpret: bool):
     B, n, d_in = x1.shape
     _, d_out, _ = w1.shape
-    bB = _largest_divisor(B, block_b)
-    bO = _largest_divisor(d_out, block_o)
-    bK = _largest_divisor(d_in, block_k)
     nk = d_in // bK
     grid = (n, B // bB, d_out // bO, nk)
 
@@ -173,3 +228,61 @@ def dyad_mm_blocks(
         ),
         interpret=interpret,
     )(x1, x2, w1, w2)
+
+
+def dyad_mm_blocks_two(
+    x1: jax.Array,
+    x2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+):
+    """As :func:`dyad_mm_blocks` but returns (z1, z2) separately (OT/DT)."""
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    bb, bo, bk = resolve_blocks("dyad_mm_blocks_two", B, n, d_in, d_out,
+                                x1.dtype, block_b, block_o, block_k)
+    plan = plan_tiles(B, d_out, d_in, bb, bo, bk)
+    x1, x2, w1, w2 = _pad_inputs(plan, x1, x2, w1, w2)
+    z1, z2 = _dyad_mm_two_impl(x1, x2, w1, w2, bB=plan.bB, bO=plan.bO,
+                               bK=plan.bK, interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_out:
+        z1, z2 = z1[:B, :, :d_out], z2[:B, :, :d_out]
+    return z1, z2
+
+
+def dyad_mm_blocks(
+    x1: jax.Array,
+    x2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dual-bmm over per-block views.
+
+    x1, x2: (B, n_dyad, d_in) — block-contiguous / permuted input views.
+    w1, w2: (n_dyad, d_out, d_in).
+    Returns (B, n_dyad, d_out), dtype of x1.
+
+    Block sizes default to the autotuned tiles for this shape/dtype/backend
+    (``repro.perf.autotune``); pass explicit values to override.
+    """
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    bb, bo, bk = resolve_blocks("dyad_mm_blocks", B, n, d_in, d_out,
+                                x1.dtype, block_b, block_o, block_k)
+    plan = plan_tiles(B, d_out, d_in, bb, bo, bk)
+    x1, x2, w1, w2 = _pad_inputs(plan, x1, x2, w1, w2)
+    out = _dyad_mm_impl(x1, x2, w1, w2, bB=plan.bB, bO=plan.bO, bK=plan.bK,
+                        interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_out:
+        out = out[:B, :, :d_out]
+    return out

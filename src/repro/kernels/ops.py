@@ -10,6 +10,12 @@
 
 On non-TPU backends the kernel runs in ``interpret=True`` mode, which executes
 the kernel body in Python for bit-correct validation on CPU.
+
+Tile sizes: the calls below pass no explicit ``block_*``, so the kernel
+wrappers resolve tiles from the autotune cache per (shape, dtype, backend)
+— see :mod:`repro.perf.autotune`.  Run the tuner (or construct the serve
+engine with ``autotune=True``) BEFORE the first trace of a jitted caller:
+the resolved tiles are baked into the trace.
 """
 from __future__ import annotations
 
@@ -23,6 +29,9 @@ from repro.kernels.dyad_mm import dyad_mm_blocks, dyad_mm_blocks_two
 
 
 def _interpret() -> bool:
+    """Single source of truth for the kernel execution mode — the autotuner
+    and benchmarks reuse this so tuned tiles are measured the same way the
+    serving hot path runs them."""
     return jax.default_backend() != "tpu"
 
 

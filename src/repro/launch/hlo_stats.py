@@ -34,8 +34,11 @@ _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
 _INSTR_RE = re.compile(
     r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[^\]]*\]"
     r"(?:\{[^}]*\})?))\s*([\w\-]+)\(")
+# NB: the while operand list may embed a tuple TYPE with its own parens —
+# `while((s32[], f32[8,8]) %tuple), condition=...` — so the operand part
+# cannot be matched with [^)]*; anchor on the attribute names instead.
 _WHILE_RE = re.compile(
-    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+    r"\bwhile\(.*condition=%?([\w.\-]+), body=%?([\w.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")

@@ -36,8 +36,10 @@ _COLL_RE = re.compile(
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
     r"collective-permute)(?P<start>-start)?\(")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# the while operand list may embed a tuple type with nested parens — anchor
+# on the attribute names (see hlo_stats._WHILE_RE)
 _WHILE_RE = re.compile(
-    r"while\([^)]*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+    r"\bwhile\(.*condition=%?([\w.\-]+), body=%?([\w.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")

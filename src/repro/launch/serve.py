@@ -53,6 +53,11 @@ def main():
                     help="continuous engine: retire sequences at this token")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune Pallas kernel tiles for this model's "
+                         "dyad shapes before compiling (repro.perf); only "
+                         "meaningful with a kernel-routed linear spec, "
+                         "e.g. --linear dyad_it_4_kernel")
     args = ap.parse_args()
 
     linear = configs.linear_cfg(args.linear) if args.linear else None
@@ -71,7 +76,8 @@ def main():
     if args.engine == "continuous":
         engine = ContinuousBatchingEngine(
             cfg, params, n_slots=args.slots, max_len=max_len,
-            eos_id=args.eos_id, temperature=args.temperature, seed=args.seed)
+            eos_id=args.eos_id, temperature=args.temperature, seed=args.seed,
+            autotune=args.autotune)
         lengths = [max(1, args.prompt_len - (i % 4)) for i in range(args.requests)]
         prompts = [
             jax.random.randint(jax.random.fold_in(key, i), (lengths[i],), 0,
@@ -88,7 +94,7 @@ def main():
         print({u: results[u][:8] for u in uids[:4]})
         return
 
-    engine = Engine(cfg, params, max_len=max_len)
+    engine = Engine(cfg, params, max_len=max_len, autotune=args.autotune)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     frames = None

@@ -1,0 +1,25 @@
+"""Performance subsystem: autotuning, benchmark records, regression gating.
+
+Three cooperating parts (see docs/ARCHITECTURE.md §Performance subsystem):
+
+* :mod:`repro.perf.autotune` — per-(shape, dtype, backend) Pallas block-size
+  sweeps with a persistent JSON cache.  ``get_tuned_blocks`` is the lookup
+  the kernels call at trace time.
+* :mod:`repro.perf.record` / :mod:`repro.perf.registry` — typed
+  :class:`BenchResult` records and the suite registry behind
+  ``python benchmarks/run.py --suite <name>``, which writes
+  ``BENCH_<suite>.json`` at the repo root.
+* :mod:`repro.perf.compare` / ``python -m repro.perf.check`` — diff a fresh
+  run against the last committed ``BENCH_*.json`` and fail on regression.
+"""
+from repro.perf.autotune import (autotune_dyad, candidate_blocks,
+                                 get_tuned_blocks, tune_key)
+from repro.perf.record import (BenchResult, Recorder, current_recorder,
+                               hlo_metrics, recording)
+from repro.perf.registry import available_suites, register, run_suite
+
+__all__ = [
+    "BenchResult", "Recorder", "current_recorder", "recording", "hlo_metrics",
+    "register", "run_suite", "available_suites",
+    "autotune_dyad", "candidate_blocks", "get_tuned_blocks", "tune_key",
+]

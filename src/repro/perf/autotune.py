@@ -1,0 +1,330 @@
+"""Pallas block-size autotuner with a persistent JSON cache.
+
+The fused DYAD kernel (:mod:`repro.kernels.dyad_mm`) tiles its grid with
+``(block_b, block_o, block_k)``.  The right tile depends on the operand
+shapes, dtype, and backend — a fixed default leaves MXU utilization on the
+table for every shape it wasn't hand-picked for.  This module sweeps
+candidate tiles per ``(op, shape, dtype, backend)`` key, times the real
+kernel, and persists the winner:
+
+* user cache   — ``~/.cache/repro_perf/blocks.json`` (override the directory
+  with ``REPRO_PERF_CACHE_DIR``); written atomically, corrupt files are
+  treated as empty and rewritten on the next ``put``;
+* repo defaults — ``src/repro/perf/tuned/defaults.json``, shipped with the
+  package so fresh checkouts start from tuned tiles for the shapes the
+  benchmarks exercise.
+
+``get_tuned_blocks`` is the lookup the kernel wrappers call at trace time
+(shapes are concrete then); explicit ``block_*`` arguments always win, so
+the tuner itself times candidates without consulting the cache.
+
+Batch sizes are bucketed to the next power of two: decode steps see
+``B = batch`` while prefill sees ``B = batch * seq``, and tile choice is
+insensitive to B within a bucket (the b-axis tile clamps to the bucket).
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.perf.record import backend_name as _backend
+from repro.perf.record import time_us as _time_us
+
+Blocks = Dict[str, int]
+
+DEFAULT_BLOCKS: Blocks = {"block_b": 256, "block_o": 256, "block_k": 512}
+
+# VMEM is ~16 MB/core on TPU v4/v5; leave headroom for double-buffered
+# pipelines (factor 2 on streamed operands) and the fp32 accumulator(s).
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+_DEFAULTS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "tuned", "defaults.json")
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def tune_key(op: str, B: int, n: int, d_in: int, d_out: int,
+             dtype: str = "float32", backend: Optional[str] = None) -> str:
+    """Canonical cache key; B is bucketed to the next power of two."""
+    backend = backend or _backend()
+    return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}"
+            f"|{dtype}|{backend}")
+
+
+class BlockCache:
+    """Two-layer persistent cache: user file over packaged defaults."""
+
+    def __init__(self, user_path: Optional[str] = None,
+                 defaults_path: str = _DEFAULTS_PATH):
+        if user_path is None:
+            root = os.environ.get(
+                "REPRO_PERF_CACHE_DIR",
+                os.path.join(os.path.expanduser("~"), ".cache", "repro_perf"))
+            user_path = os.path.join(root, "blocks.json")
+        self.user_path = user_path
+        self.defaults_path = defaults_path
+        self._user: Optional[dict] = None
+        self._defaults: Optional[dict] = None
+
+    def _load(self, path: str) -> dict:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict):
+                raise ValueError("top-level JSON is not an object")
+            return doc
+        except FileNotFoundError:
+            return {}
+        except (json.JSONDecodeError, ValueError, OSError) as e:
+            warnings.warn(f"repro.perf: ignoring corrupt block cache "
+                          f"{path}: {e}")
+            return {}
+
+    @property
+    def user(self) -> dict:
+        if self._user is None:
+            self._user = self._load(self.user_path)
+        return self._user
+
+    @property
+    def defaults(self) -> dict:
+        if self._defaults is None:
+            self._defaults = self._load(self.defaults_path)
+        return self._defaults
+
+    def get(self, key: str) -> Optional[Blocks]:
+        for layer in (self.user, self.defaults):
+            entry = layer.get(key)
+            if isinstance(entry, dict) and isinstance(
+                    entry.get("blocks"), dict):
+                b = entry["blocks"]
+                if all(isinstance(b.get(f), int) and b[f] > 0
+                       for f in ("block_b", "block_o", "block_k")):
+                    return {f: b[f] for f in
+                            ("block_b", "block_o", "block_k")}
+        return None
+
+    def get_entry(self, key: str) -> Optional[dict]:
+        for layer in (self.user, self.defaults):
+            if key in layer:
+                return layer[key]
+        return None
+
+    def put(self, key: str, blocks: Blocks, **meta) -> None:
+        self.user[key] = {"blocks": dict(blocks), **meta}
+        os.makedirs(os.path.dirname(self.user_path) or ".", exist_ok=True)
+        tmp = self.user_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.user, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.user_path)
+
+    def invalidate(self) -> None:
+        self._user = None
+        self._defaults = None
+
+
+_CACHE: Optional[BlockCache] = None
+
+
+def get_cache() -> BlockCache:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = BlockCache()
+    return _CACHE
+
+
+def reset_cache(cache: Optional[BlockCache] = None) -> None:
+    """Swap / drop the process-wide cache (tests, env-var changes)."""
+    global _CACHE
+    _CACHE = cache
+
+
+def get_tuned_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
+                     dtype: str = "float32",
+                     backend: Optional[str] = None) -> Blocks:
+    """Tuned ``(block_b, block_o, block_k)`` for this key, else the
+    hardcoded defaults.  Called by the kernel wrappers at trace time."""
+    found = get_cache().get(tune_key(op, B, n, d_in, d_out, dtype, backend))
+    return found if found is not None else dict(DEFAULT_BLOCKS)
+
+
+# -- candidate generation -----------------------------------------------------
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}.get(dtype, 4)
+
+
+def vmem_estimate(bb: int, bo: int, bk: int, dtype: str,
+                  n_acc: int = 1) -> int:
+    """Double-buffered VMEM footprint of one grid step of the fused kernel:
+    two x tiles + two w tiles streamed, one (or two) output tiles, plus the
+    fp32 accumulator scratch."""
+    ib = _dtype_bytes(dtype)
+    stream = 2 * (2 * bb * bk + 2 * bo * bk + n_acc * bb * bo) * ib
+    acc = 4 * n_acc * bb * bo
+    return stream + acc
+
+
+def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
+                     dtype: str = "float32", n_acc: int = 1,
+                     max_candidates: int = 32) -> List[Blocks]:
+    """Power-of-two tile sweep clamped to the (bucketed) dims and filtered
+    by the VMEM budget.  Always contains the hardcoded default."""
+    bbs = [b for b in (64, 128, 256, 512) if b <= max(_next_pow2(B), 64)]
+    bos = [b for b in (128, 256, 512) if b <= max(_next_pow2(d_out), 128)]
+    bks = [b for b in (128, 256, 512, 1024) if b <= max(_next_pow2(d_in), 128)]
+    out: List[Blocks] = []
+    seen = set()
+    for cand in ([DEFAULT_BLOCKS]
+                 + [{"block_b": bb, "block_o": bo, "block_k": bk}
+                    for bb in bbs for bo in bos for bk in bks]):
+        sig = (cand["block_b"], cand["block_o"], cand["block_k"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        if vmem_estimate(*sig, dtype=dtype, n_acc=n_acc) > VMEM_BUDGET_BYTES:
+            continue
+        out.append(dict(cand))
+        if len(out) >= max_candidates:
+            break
+    return out
+
+
+# -- the sweep ----------------------------------------------------------------
+
+
+def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
+                  dtype: str = "float32", *,
+                  candidates: Optional[Iterable[Blocks]] = None,
+                  iters: int = 3, warmup: int = 1,
+                  cache: Optional[BlockCache] = None,
+                  force: bool = False) -> Tuple[Blocks, float]:
+    """Sweep block sizes for one kernel shape; persist and return the winner.
+
+    ``op`` is ``"dyad_mm_blocks"``, ``"dyad_mm_blocks_two"`` or
+    ``"dense_bmm"`` (the baseline).  Returns ``(blocks, best_us)``.  A cache
+    hit short-circuits the sweep unless ``force=True``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    cache = cache or get_cache()
+    key = tune_key(op, B, n, d_in, d_out, dtype)
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            entry = cache.get_entry(key) or {}
+            return hit, float(entry.get("us", 0.0))
+
+    kd = jnp.dtype(dtype)
+    kx = jax.random.PRNGKey(0)
+    x1 = jax.random.normal(kx, (B, n, d_in), kd)
+    x2 = jax.random.normal(jax.random.fold_in(kx, 1), (B, n, d_in), kd)
+    w1 = jax.random.normal(jax.random.fold_in(kx, 2), (n, d_out, d_in), kd)
+    w2 = jax.random.normal(jax.random.fold_in(kx, 3), (n, d_out, d_in), kd)
+
+    if op == "dense_bmm":
+        # the baseline has no tile knobs; record its time under the default
+        # key so compare tables can show fused-vs-dense per shape.
+        f = jax.jit(lambda: jnp.einsum("bgk,gok->bgo", x1, w1)
+                    + jnp.einsum("bgk,gok->bgo", x2, w2))
+        us = _time_us(f, iters=iters, warmup=warmup)
+        blocks = dict(DEFAULT_BLOCKS)
+        cache.put(key, blocks, us=round(us, 2), op=op)
+        return blocks, us
+
+    from repro.kernels import dyad_mm
+    from repro.kernels.ops import _interpret
+
+    kernel = {"dyad_mm_blocks": dyad_mm.dyad_mm_blocks,
+              "dyad_mm_blocks_two": dyad_mm.dyad_mm_blocks_two}[op]
+    n_acc = 2 if op == "dyad_mm_blocks_two" else 1
+    interpret = _interpret()
+
+    best: Optional[Blocks] = None
+    best_us = float("inf")
+    cands = list(candidates) if candidates is not None else candidate_blocks(
+        B, n, d_in, d_out, dtype, n_acc=n_acc)
+    # distinct requested blocks can clamp to identical EFFECTIVE tiles for
+    # this concrete shape — timing those again only measures noise
+    seen_plans = set()
+    deduped = []
+    for cand in cands:
+        plan = dyad_mm.plan_tiles(B, d_out, d_in, cand["block_b"],
+                                  cand["block_o"], cand["block_k"])
+        if plan in seen_plans:
+            continue
+        seen_plans.add(plan)
+        deduped.append(cand)
+    cands = deduped
+    for cand in cands:
+        try:
+            us = _time_us(
+                lambda c=cand: kernel(x1, x2, w1, w2, interpret=interpret,
+                                      **c),
+                iters=iters, warmup=warmup)
+        except Exception as e:       # invalid tiling for this backend/shape
+            warnings.warn(f"repro.perf: candidate {cand} failed for "
+                          f"{key}: {e}")
+            continue
+        if us < best_us:
+            best, best_us = cand, us
+    if best is None:
+        raise RuntimeError(f"autotune: every candidate failed for {key}")
+    cache.put(key, best, us=round(best_us, 2), op=op,
+              candidates=len(cands))
+    return best, best_us
+
+
+def model_dyad_shapes(cfg) -> List[Tuple[int, int, int]]:
+    """Distinct ``(n_dyad, d_in_per_block, d_out_per_block)`` kernel shapes a
+    model config routes through the fused kernel (ff site today)."""
+    lin = getattr(cfg, "linear", None)
+    if lin is None or not getattr(lin, "use_kernel", False):
+        return []
+    from repro.core import dyad
+
+    shapes = set()
+    pairs = []
+    if lin.dyad_at("ff"):
+        pairs += [(cfg.d_model, cfg.d_ff), (cfg.d_ff, cfg.d_model)]
+    if lin.dyad_at("attn"):
+        # hd is the RESOLVED head dim (the raw head_dim field defaults to 0)
+        hd = getattr(cfg, "hd", None) or getattr(cfg, "head_dim", 0)
+        q = cfg.n_heads * hd
+        kv = cfg.n_kv_heads * hd
+        pairs += [(cfg.d_model, q), (cfg.d_model, kv), (q, cfg.d_model)]
+    for f_in, f_out in pairs:
+        if f_in <= 0 or f_out <= 0:
+            continue
+        n = dyad.resolve_n_dyad(f_in, f_out, lin.n_dyad)
+        shapes.add((n, f_in // n, f_out // n))
+    return sorted(shapes)
+
+
+def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
+                           iters: int = 2) -> Dict[str, Blocks]:
+    """Pre-tune every fused-kernel shape a model will hit with ``tokens``
+    rows (decode: batch; prefill: batch*seq).  Serving calls this at engine
+    construction so the first jit trace already picks tuned tiles.  No-op
+    (empty dict) for configs that don't use the Pallas kernel.
+
+    ``dtype`` defaults to the config's COMPUTE dtype — ops.py casts weights
+    to the activation dtype, so that is the dtype trace-time lookups use."""
+    if dtype is None:
+        dtype = getattr(cfg, "compute_dtype", None) or "float32"
+    tuned: Dict[str, Blocks] = {}
+    for n, d_in, d_out in model_dyad_shapes(cfg):
+        variant = getattr(cfg.linear, "variant", "it")
+        op = "dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"
+        blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dtype,
+                                  iters=iters)
+        tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
+    return tuned

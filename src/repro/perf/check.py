@@ -1,0 +1,135 @@
+"""Regression gate: ``python -m repro.perf.check``.
+
+Diffs every working-tree ``BENCH_*.json`` against the version last
+committed to git (``--baseline-rev``, default ``HEAD``) and exits nonzero
+if any record regressed beyond tolerance.  A suite with no committed
+baseline passes (first run establishes the trajectory); a baseline
+recorded on a different machine or backend is compared and printed but
+never gated — raw wall-times are only comparable on the recording host,
+so cross-machine runs (fresh clones, CI runners) need ``--cross-backend``
+plus a generous ``--tol`` to opt into gating.
+
+    python benchmarks/run.py --suite ff_timing     # writes BENCH_ff_timing.json
+    python -m repro.perf.check                     # gate vs committed baseline
+    python -m repro.perf.check --suite smoke --tol 3.0
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+from typing import List, Optional
+
+from repro.perf import compare
+from repro.perf.record import BenchResult, load_bench
+
+
+def repo_root(start: Optional[str] = None) -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--show-toplevel"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=start or os.getcwd())
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return start or os.getcwd()
+
+
+def committed_bench(rev: str, relpath: str, root: str) -> Optional[dict]:
+    """``git show <rev>:<relpath>`` parsed as a BENCH document, or None if
+    the file doesn't exist at that revision (or we're not in a git repo)."""
+    try:
+        out = subprocess.run(["git", "show", f"{rev}:{relpath}"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=root)
+    except OSError:
+        return None
+    if out.returncode != 0:
+        return None
+    try:
+        doc = json.loads(out.stdout)
+        doc["results"] = [BenchResult.from_dict(d) for d in doc["results"]]
+        return doc
+    except (json.JSONDecodeError, KeyError, ValueError, TypeError) as e:
+        print(f"warning: baseline {rev}:{relpath} unreadable ({e}); "
+              f"treating as absent", file=sys.stderr)
+        return None
+
+
+def check_file(path: str, *, rev: str, tol: float, min_us: float,
+               root: str, cross_backend: bool) -> int:
+    rel = os.path.relpath(path, root)
+    current = load_bench(path)
+    baseline = committed_bench(rev, rel, root)
+    print(f"\n== {rel} (suite={current.get('suite', '?')}, "
+          f"backend={current.get('backend', '?')}, "
+          f"sha={current.get('git_sha', '?')})")
+    if baseline is None:
+        print(f"   no baseline at {rev}: PASS (new trajectory)")
+        return 0
+
+    same_machine = (baseline.get("backend") == current.get("backend")
+                    and baseline.get("host") == current.get("host"))
+    rows = compare.compare_runs(baseline["results"], current["results"],
+                                tol=tol, min_us=min_us)
+    print(compare.format_table(rows))
+    s = compare.summarize(rows)
+    print(f"   {s['compared']} compared, {s['new']} new, "
+          f"{s['removed']} removed, {s['regressed']} regressed "
+          f"(tol={tol:.0%}, baseline backend="
+          f"{baseline.get('backend', '?')} host="
+          f"{baseline.get('host', '?')})")
+    if not same_machine and not cross_backend:
+        print("   baseline is from a different machine/backend — wall-time "
+              "gate skipped (pass --cross-backend to enforce)")
+        return 0
+    return 1 if s["regressed"] else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.perf.check", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    p.add_argument("--baseline-rev", default="HEAD",
+                   help="git revision holding the baseline (default HEAD)")
+    p.add_argument("--tol", type=float, default=compare.DEFAULT_TOL,
+                   help="relative slowdown tolerance (0.25 = 25%% slower)")
+    p.add_argument("--min-us", type=float, default=compare.DEFAULT_MIN_US,
+                   help="ignore cells faster than this (timer noise floor)")
+    p.add_argument("--suite", action="append", default=None,
+                   help="only gate these suites (repeatable)")
+    p.add_argument("--cross-backend", action="store_true",
+                   help="gate wall-times even when the baseline was "
+                        "recorded on a different machine or backend")
+    p.add_argument("paths", nargs="*",
+                   help="explicit BENCH_*.json paths (default: repo root)")
+    args = p.parse_args(argv)
+
+    root = repo_root()
+    paths = args.paths or sorted(glob.glob(os.path.join(root,
+                                                        "BENCH_*.json")))
+    if args.suite:
+        wanted = set(args.suite)
+        paths = [q for q in paths
+                 if os.path.basename(q)[len("BENCH_"):-len(".json")]
+                 in wanted]
+    if not paths:
+        print("no BENCH_*.json found — run "
+              "`python benchmarks/run.py --suite <name>` first")
+        return 0
+
+    rc = 0
+    for path in paths:
+        rc |= check_file(path, rev=args.baseline_rev, tol=args.tol,
+                         min_us=args.min_us, root=root,
+                         cross_backend=args.cross_backend)
+    print("\nPERF GATE:", "FAIL" if rc else "PASS")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""Diff two benchmark runs and flag regressions.
+
+A *regression* is a record whose ``us_per_call`` grew by more than
+``tol`` (relative) over the baseline, provided the absolute time is above
+``min_us`` (sub-noise-floor cells can't regress meaningfully).  Records are
+matched by name; added/removed records are reported but never fail the
+gate — adding coverage must not require lockstep baseline edits.
+
+The table is roofline-annotated: records that carry hlo_stats-derived
+``flops`` / ``bytes`` metrics get achieved-GFLOP/s and arithmetic-intensity
+columns plus the fraction of the (TPU-v5e) roofline bound the measurement
+achieves — see :mod:`repro.launch.roofline` for the hardware constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.perf.record import BenchResult
+
+DEFAULT_TOL = 0.25          # 25% slower than baseline fails the gate
+DEFAULT_MIN_US = 50.0       # noise floor: current value AND the absolute
+                            # slowdown must both exceed this to regress
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    base_us: Optional[float]
+    cur_us: Optional[float]
+    ratio: Optional[float]            # cur/base; >1 is slower
+    regressed: bool
+    gflops: Optional[float] = None    # achieved, from the CURRENT record
+    intensity: Optional[float] = None  # flops/byte
+    roofline_frac: Optional[float] = None
+
+    @property
+    def status(self) -> str:
+        if self.base_us is None:
+            return "NEW"
+        if self.cur_us is None:
+            return "REMOVED"
+        return "REGRESSED" if self.regressed else "ok"
+
+
+def _roofline_cols(r: BenchResult):
+    flops = r.metrics.get("flops")
+    bytes_ = r.metrics.get("bytes")
+    if not isinstance(flops, (int, float)) or flops <= 0:
+        return None, None, None
+    gflops = flops / max(r.us_per_call, 1e-9) / 1e3    # flops/us -> GFLOP/s
+    intensity = None
+    frac = None
+    if isinstance(bytes_, (int, float)) and bytes_ > 0:
+        from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+        intensity = flops / bytes_
+        bound_s = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+        frac = bound_s / (r.us_per_call * 1e-6)
+    return gflops, intensity, frac
+
+
+def compare_runs(baseline: List[BenchResult], current: List[BenchResult],
+                 *, tol: float = DEFAULT_TOL,
+                 min_us: float = DEFAULT_MIN_US) -> List[Row]:
+    base_by = {r.name: r for r in baseline}
+    cur_by = {r.name: r for r in current}
+    rows: List[Row] = []
+    for name in sorted(set(base_by) | set(cur_by)):
+        b, c = base_by.get(name), cur_by.get(name)
+        ratio = None
+        regressed = False
+        if b is not None and c is not None:
+            ratio = c.us_per_call / max(b.us_per_call, 1e-9)
+            regressed = (ratio > 1.0 + tol
+                         and c.us_per_call >= min_us
+                         and c.us_per_call - b.us_per_call >= min_us)
+        gfl, inten, frac = _roofline_cols(c) if c is not None else (
+            None, None, None)
+        rows.append(Row(
+            name=name,
+            base_us=b.us_per_call if b else None,
+            cur_us=c.us_per_call if c else None,
+            ratio=ratio, regressed=regressed,
+            gflops=gfl, intensity=inten, roofline_frac=frac))
+    return rows
+
+
+def regressions(rows: List[Row]) -> List[Row]:
+    return [r for r in rows if r.regressed]
+
+
+def _fmt(v, spec="{:.1f}", na="-") -> str:
+    return na if v is None else spec.format(v)
+
+
+def format_table(rows: List[Row], *, show_ok: bool = True) -> str:
+    hdr = (f"{'name':44s} {'base_us':>10s} {'cur_us':>10s} {'ratio':>7s} "
+           f"{'GF/s':>8s} {'F/B':>7s} {'roof%':>6s}  status")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if not show_ok and r.status == "ok":
+            continue
+        lines.append(
+            f"{r.name[:44]:44s} {_fmt(r.base_us):>10s} {_fmt(r.cur_us):>10s} "
+            f"{_fmt(r.ratio, '{:.2f}'):>7s} {_fmt(r.gflops, '{:.2f}'):>8s} "
+            f"{_fmt(r.intensity, '{:.1f}'):>7s} "
+            f"{_fmt(r.roofline_frac and 100 * r.roofline_frac, '{:.1f}'):>6s}"
+            f"  {r.status}")
+    return "\n".join(lines)
+
+
+def summarize(rows: List[Row]) -> Dict[str, int]:
+    return {
+        "compared": sum(1 for r in rows if r.ratio is not None),
+        "new": sum(1 for r in rows if r.status == "NEW"),
+        "removed": sum(1 for r in rows if r.status == "REMOVED"),
+        "regressed": sum(1 for r in rows if r.regressed),
+    }

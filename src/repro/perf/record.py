@@ -1,0 +1,218 @@
+"""Typed benchmark records and the ``BENCH_<suite>.json`` writer.
+
+Every benchmark suite appends :class:`BenchResult` records to the active
+:class:`Recorder`; ``Recorder.write`` serializes the whole run as one JSON
+document keyed by suite.  The on-disk format is the repo's performance
+trajectory: committed at the root as ``BENCH_<suite>.json`` and diffed by
+``python -m repro.perf.check`` on every subsequent run.
+
+Records carry enough context to compare across commits and machines:
+git sha, backend, jax version, shape, dtype — plus free-form numeric
+``metrics`` (ratios, tokens/sec, and the hlo_stats-derived ``flops`` /
+``bytes`` used for roofline annotation in :mod:`repro.perf.compare`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import json
+import os
+import platform
+import subprocess
+from typing import Dict, List, Optional, Sequence, Union
+
+SCHEMA_VERSION = 1
+
+Metric = Union[int, float, str]
+
+
+def time_us(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on the result).
+    The one timer shared by the benchmark suites and the autotuner, so both
+    always measure the same way."""
+    import time
+
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def git_sha(short: bool = True) -> str:
+    """HEAD sha, with a ``-dirty`` suffix when the working tree has
+    uncommitted changes — a baseline's numbers must be attributable to the
+    code that produced them, not the last clean commit."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    cmd = ["git", "rev-parse"] + (["--short"] if short else []) + ["HEAD"]
+    try:
+        out = subprocess.run(cmd, capture_output=True, text=True, timeout=10,
+                             cwd=here)
+        if out.returncode != 0:
+            return "unknown"
+        sha = out.stdout.strip()
+        st = subprocess.run(["git", "status", "--porcelain"],
+                            capture_output=True, text=True, timeout=10,
+                            cwd=here)
+        if st.returncode == 0 and st.stdout.strip():
+            sha += "-dirty"
+        return sha
+    except OSError:
+        return "unknown"
+
+
+def backend_name() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchResult:
+    """One benchmark measurement: a named cell of a paper table / suite."""
+
+    name: str
+    us_per_call: float
+    suite: str = ""
+    shape: Optional[Sequence[int]] = None
+    dtype: str = "float32"
+    metrics: Dict[str, Metric] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "us_per_call": round(float(self.us_per_call), 3),
+            "suite": self.suite,
+            "dtype": self.dtype,
+            "metrics": dict(self.metrics),
+        }
+        if self.shape is not None:
+            d["shape"] = [int(s) for s in self.shape]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BenchResult":
+        if not isinstance(d.get("name"), str) or "us_per_call" not in d:
+            raise ValueError(f"malformed BenchResult: {d!r}")
+        return cls(
+            name=d["name"],
+            us_per_call=float(d["us_per_call"]),
+            suite=d.get("suite", ""),
+            shape=tuple(d["shape"]) if d.get("shape") is not None else None,
+            dtype=d.get("dtype", "float32"),
+            metrics=dict(d.get("metrics", {})),
+        )
+
+    def derived_str(self) -> str:
+        """Legacy ``k=v;k=v`` CSV column for stdout compatibility."""
+        return ";".join(f"{k}={v}" for k, v in self.metrics.items())
+
+
+class Recorder:
+    """Collects one suite's records and writes ``BENCH_<suite>.json``."""
+
+    def __init__(self, suite: str, out_dir: str = "."):
+        self.suite = suite
+        self.out_dir = out_dir
+        self.results: List[BenchResult] = []
+
+    def add(self, name: str, us_per_call: float, *,
+            shape: Optional[Sequence[int]] = None, dtype: str = "float32",
+            **metrics: Metric) -> BenchResult:
+        r = BenchResult(name=name, us_per_call=us_per_call, suite=self.suite,
+                        shape=shape, dtype=dtype, metrics=metrics)
+        self.results.append(r)
+        return r
+
+    @property
+    def path(self) -> str:
+        return os.path.join(self.out_dir, f"BENCH_{self.suite}.json")
+
+    def to_dict(self) -> dict:
+        try:
+            import jax
+            jax_version = jax.__version__
+        except Exception:
+            jax_version = "unknown"
+        return {
+            "schema": SCHEMA_VERSION,
+            "suite": self.suite,
+            "git_sha": git_sha(),
+            "backend": backend_name(),
+            "host": platform.node() or "unknown",
+            "jax": jax_version,
+            "created": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
+            "results": [r.to_dict() for r in
+                        sorted(self.results, key=lambda r: r.name)],
+        }
+
+    def write(self) -> str:
+        os.makedirs(self.out_dir, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+        return self.path
+
+
+def load_bench(path: str) -> dict:
+    """Load and validate a ``BENCH_*.json`` document."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "results" not in doc:
+        raise ValueError(f"{path}: not a BENCH document")
+    doc["results"] = [BenchResult.from_dict(d) for d in doc["results"]]
+    return doc
+
+
+# -- active-recorder context (used by benchmarks.common.emit) ----------------
+
+_ACTIVE: List[Recorder] = []
+
+
+def current_recorder() -> Optional[Recorder]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+class recording:
+    """``with recording("ff_timing", out_dir=root) as rec: ...`` — routes
+    every ``benchmarks.common.emit`` call into ``rec``."""
+
+    def __init__(self, suite: str, out_dir: str = "."):
+        self.recorder = Recorder(suite, out_dir)
+
+    def __enter__(self) -> Recorder:
+        _ACTIVE.append(self.recorder)
+        return self.recorder
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.pop()
+
+
+def hlo_metrics(fn, *args) -> Dict[str, float]:
+    """Compile ``fn(*args)`` and return loop-aware ``flops`` / ``bytes``
+    from :mod:`repro.launch.hlo_stats` — the roofline terms attached to
+    bench records so ``repro.perf.check`` can print achieved-vs-bound
+    columns without recompiling anything.
+
+    Pass the ALREADY-JITTED function the suite timed (anything exposing
+    ``.lower``) and its executable is reused; a bare callable costs one
+    extra compile."""
+    import jax
+
+    from repro.launch import hlo_stats
+
+    lowered = (fn.lower(*args) if hasattr(fn, "lower")
+               else jax.jit(fn).lower(*args))
+    stats = hlo_stats.module_stats(lowered.compile().as_text(), 1)
+    return {"flops": float(stats["flops"]), "bytes": float(stats["bytes"])}

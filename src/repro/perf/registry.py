@@ -1,0 +1,53 @@
+"""Benchmark suite registry.
+
+Suites live in ``benchmarks/bench_*.py`` and register themselves:
+
+    from repro import perf
+
+    @perf.register("ff_timing")
+    def run(): ...
+
+``run_suite`` wraps the suite in a :class:`repro.perf.record.recording`
+context (so every ``benchmarks.common.emit`` lands in a typed record) and
+writes ``BENCH_<suite>.json``.  The registry itself is import-order
+agnostic: ``benchmarks/run.py`` imports the suite modules, then asks the
+registry to run them.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+from repro.perf.record import Recorder, recording
+
+_SUITES: Dict[str, Callable[[], None]] = {}
+
+
+def register(name: str) -> Callable:
+    """Decorator: register ``fn`` as benchmark suite ``name``."""
+    def deco(fn: Callable[[], None]) -> Callable[[], None]:
+        _SUITES[name] = fn
+        return fn
+    return deco
+
+
+def available_suites() -> List[str]:
+    return sorted(_SUITES)
+
+
+def get(name: str) -> Callable[[], None]:
+    if name not in _SUITES:
+        raise KeyError(
+            f"unknown suite {name!r}; available: {available_suites()}")
+    return _SUITES[name]
+
+
+def run_suite(name: str, out_dir: str = ".",
+              write: bool = True) -> Recorder:
+    """Run one registered suite under a fresh recorder; optionally write
+    ``BENCH_<name>.json`` into ``out_dir``.  Returns the recorder."""
+    fn = get(name)
+    with recording(name, out_dir) as rec:
+        fn()
+    if write:
+        rec.write()
+    return rec

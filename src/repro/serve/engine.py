@@ -103,9 +103,14 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelCfg, params, max_len: int,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, autotune: bool = False):
         self.cfg, self.params, self.max_len = cfg, params, max_len
         self.cache_dtype = cache_dtype
+        # tile tuning happens per generate() call, where the actual row
+        # counts are known (prefill sees B*S rows, decode sees B) — a jit
+        # trace bakes in whatever blocks the cache holds when it runs, so
+        # the tuner must go first (no-op for non-Pallas configs)
+        self._autotune = autotune
         self._step = jax.jit(make_serve_step(cfg))
         self._prefill = jax.jit(functools.partial(prefill, cfg))
         self._loops: Dict[tuple, callable] = {}
@@ -121,6 +126,12 @@ class Engine:
             raise ValueError(
                 f"prompt {S} + {num_new} new tokens exceeds max_len "
                 f"{self.max_len}")
+        if self._autotune:
+            from repro.perf.autotune import ensure_tuned_for_model
+
+            # cache hits short-circuit, so repeat calls are cheap
+            ensure_tuned_for_model(self.cfg, tokens=B * S)   # prefill rows
+            ensure_tuned_for_model(self.cfg, tokens=B)       # decode rows
         cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
         logits, cache = self._prefill(self.params, cache, prompt_tokens,
                                       frames)
@@ -258,10 +269,17 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 8,
                  max_len: int = 256, eos_id: Optional[int] = None,
                  temperature: float = 0.0, cache_dtype=jnp.float32,
-                 seed: int = 0):
+                 seed: int = 0, autotune: bool = False):
         if cfg.family in ("vlm", "encdec"):
             raise NotImplementedError(
                 "continuous batching currently serves token-only families")
+        self._autotune = autotune
+        if autotune:
+            from repro.perf.autotune import ensure_tuned_for_model
+
+            # tune for the padded decode batch before the step jit traces;
+            # prefill buckets are tuned per prompt length in _prefill_one
+            ensure_tuned_for_model(cfg, tokens=max(n_slots, 1))
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id, self.temperature = eos_id, float(temperature)
@@ -296,6 +314,12 @@ class ContinuousBatchingEngine:
         (exact-shape compilation; length bucketing is future work)."""
         if prompt_len in self._prefills:
             return self._prefills[prompt_len]
+        if self._autotune:
+            from repro.perf.autotune import ensure_tuned_for_model
+
+            # the admission prefill sees prompt_len rows; tune that bucket
+            # before this trace bakes its tiles in (cache hits are cheap)
+            ensure_tuned_for_model(self.cfg, tokens=prompt_len)
         cfg, max_len, dtype = self.cfg, self.max_len, self.cache_dtype
         temperature = self.temperature
 

@@ -49,15 +49,25 @@ def make_train_step(cfg: ModelCfg, opt: AdamW,
             micro = jax.tree.map(split, batch)
 
             def mb(carry, b):
+                gsum, gcomp, msum = carry
                 (_, m), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
-                gsum = jax.tree.map(jnp.add, carry[0], g)
-                msum = jax.tree.map(jnp.add, carry[1], m)
-                return (gsum, msum), None
+                # Kahan-compensated sum: the per-microbatch gradients are the
+                # same magnitude, so a plain sequential sum loses ~accum ulps
+                # of the mean; the compensation term keeps the accumulated
+                # gradient within 1 ulp of the exact sum regardless of accum.
+                y = jax.tree.map(jnp.subtract, g, gcomp)
+                t = jax.tree.map(jnp.add, gsum, y)
+                gcomp = jax.tree.map(lambda t_, s, y_: (t_ - s) - y_,
+                                     t, gsum, y)
+                msum = jax.tree.map(jnp.add, msum, m)
+                return (t, gcomp, msum), None
 
             zero_g = jax.tree.map(jnp.zeros_like, params)
+            zero_c = jax.tree.map(jnp.zeros_like, params)
             zero_m = {"loss": jnp.zeros(()), "aux": jnp.zeros(()),
                       "ppl_proxy": jnp.zeros(())}
-            (grads, msum), _ = jax.lax.scan(mb, (zero_g, zero_m), micro)
+            (grads, _, msum), _ = jax.lax.scan(
+                mb, (zero_g, zero_c, zero_m), micro)
             grads = jax.tree.map(lambda g: g / accum, grads)
             metrics = jax.tree.map(lambda m: m / accum, msum)
 

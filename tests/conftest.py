@@ -38,3 +38,20 @@ def _install_hypothesis_stub() -> None:
 
 
 _install_hypothesis_stub()
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path):
+    """Keep kernel tile resolution reproducible: never let the developer's
+    ~/.cache/repro_perf (or the packaged defaults) leak tile choices into
+    tests.  Tests that exercise the cache install their own (test_perf)."""
+    from repro.perf import autotune
+
+    autotune.reset_cache(autotune.BlockCache(
+        user_path=str(tmp_path / "autotune-blocks.json"),
+        defaults_path=str(tmp_path / "autotune-defaults.json")))
+    yield
+    autotune.reset_cache(None)

@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import dyad
 from repro.kernels import ops, ref
-from repro.kernels.dyad_mm import dyad_mm_blocks, dyad_mm_blocks_two
+from repro.kernels.dyad_mm import (dyad_mm_blocks, dyad_mm_blocks_two,
+                                   plan_tiles)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -78,6 +79,44 @@ def test_kernel_block_tilings():
                                 block_k=16, interpret=True)
     np.testing.assert_allclose(
         np.asarray(z1 + z2), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,n,d_in,d_out", [
+    (10, 2, 33, 17),          # odd k, prime o
+    (13, 3, 7, 5),            # everything prime
+    (64, 2, 129, 130),        # just-past-128 feature dims
+])
+def test_kernel_degenerate_dims_exact(B, n, d_in, d_out):
+    """Prime/odd dims used to collapse _largest_divisor to 1-wide tiles
+    (catastrophic grid); the tile planner now pads instead — results must
+    stay exact (zero padding contributes zero products)."""
+    x1 = jax.random.normal(KEY, (B, n, d_in))
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (B, n, d_in))
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (n, d_out, d_in))
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (n, d_out, d_in))
+    want = (jnp.einsum("bgk,gok->bgo", x1, w1)
+            + jnp.einsum("bgk,gok->bgo", x2, w2))
+    got = dyad_mm_blocks(x1, x2, w1, w2, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    z1, z2 = dyad_mm_blocks_two(x1, x2, w1, w2, interpret=True)
+    np.testing.assert_allclose(np.asarray(z1 + z2), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_tiles_never_degenerate():
+    """Tiles stay at lane/sublane granularity even for prime dims > block,
+    and the grid never explodes to per-element steps."""
+    plan = plan_tiles(521, 1031, 1031, 256, 256, 512)   # all prime
+    assert plan.bB >= 8 and plan.bO >= 128 and plan.bK >= 128
+    assert plan.padded_b % plan.bB == 0
+    assert plan.padded_o % plan.bO == 0
+    assert plan.padded_k % plan.bK == 0
+    assert plan.grid_steps <= 64
+    # healthy dims are untouched: no padding, exact divisors
+    plan = plan_tiles(64, 384, 512, 256, 256, 512)
+    assert (plan.padded_b, plan.padded_o, plan.padded_k) == (64, 384, 512)
+    assert (plan.bB, plan.bO, plan.bK) == (64, 192, 512)
 
 
 def test_kernel_multi_dim_leading():

@@ -71,11 +71,20 @@ def test_grad_accum_equivalence():
     b = data.batch(0)
     s1 = init_train_state(TINY, opt, KEY)
     s2 = init_train_state(TINY, opt, KEY)
-    ns1, _ = jax.jit(make_train_step(TINY, opt))(s1, b)
-    ns2, _ = jax.jit(make_train_step(TINY.replace(grad_accum=4), opt))(s2, b)
+    ns1, m1 = jax.jit(make_train_step(TINY, opt))(s1, b)
+    ns2, m2 = jax.jit(make_train_step(TINY.replace(grad_accum=4), opt))(s2, b)
+    # gradient-level contract (tight): the accumulated gradient matches the
+    # full-batch gradient up to fp32 reduction-order noise
+    np.testing.assert_allclose(float(m1["grad_norm"]), float(m2["grad_norm"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+    # post-AdamW params (realistic): near-zero gradient elements amplify the
+    # ~1e-8 reduction-order noise through update = g/(|g|+eps) by up to
+    # 1/(4*eps), so bitwise-tight param comparison is not a sound contract
     for a, c in zip(jax.tree.leaves(ns1["params"]),
                     jax.tree.leaves(ns2["params"])):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-6)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-4)
 
 
 def test_training_reduces_loss():
