@@ -50,6 +50,24 @@ def run():
                                iters=2, force=True)
     emit("smoke_kernel_autotune", us, shape=KERNEL_SHAPE, **blocks)
 
+    # tiny train-step record: fused backward vs the einsum-VJP oracle, so
+    # backward regressions fail the bench-smoke CI gate.  Reuses the
+    # train_step suite's step builder — same computation, smaller dims.
+    from benchmarks.bench_train_step import dyad_ff_apply, make_adam_step
+
+    sk = dyad.DyadSpec(n_dyad=4, variant="it", use_kernel=True)
+    se = dyad.DyadSpec(n_dyad=4, variant="it", use_kernel=True,
+                       use_kernel_bwd=False)
+    pt = {"up": dyad.init(key, D, FF, sk), "down": dyad.init(key, FF, D, sk)}
+    opt, step_fused = make_adam_step(dyad_ff_apply(sk))
+    _, step_einsum = make_adam_step(dyad_ff_apply(se))
+    state = (pt, opt.init(pt))
+    t_fused = time_fn(step_fused, state, x, iters=3)
+    t_einsum = time_fn(step_einsum, state, x, iters=3)
+    emit("smoke_train_step_dyad_fused_bwd", t_fused, shape=(TOKENS, D, FF),
+         vs_einsum_vjp=round(t_einsum / t_fused, 2))
+    emit("smoke_train_step_dyad_einsum_vjp", t_einsum, shape=(TOKENS, D, FF))
+
 
 if __name__ == "__main__":
     run()

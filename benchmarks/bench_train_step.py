@@ -1,0 +1,148 @@
+"""Training hot path: full fwd+bwd+AdamW step on a DYAD vs DENSE ff block.
+
+The paper's headline claim is TRAINING speed (§1: 7-15% faster pretraining),
+so this suite times the exact unit the claim lives in — one optimizer step
+over an ff module at OPT-125m dimensions — across backward routes:
+
+* ``train_ff_dense``           — dense up/down baseline.
+* ``train_ff_dyad_einsum_vjp`` — kernel forward, pre-PR einsum-VJP backward
+                                 (``use_kernel_bwd=False``: the ref.py
+                                 oracle, which materializes the strided
+                                 views and the dx un-view).
+* ``train_ff_dyad_fused_bwd``  — kernel forward + the fused backward route
+                                 (``use_kernel_bwd=True``): Pallas
+                                 dgrad/wgrad kernels on TPU, the compiled
+                                 direct-layout lowering of the same
+                                 dataflow elsewhere.
+* ``train_ff_dyad_pallas_bwd`` — the true Pallas backward kernels forced
+                                 via ``REPRO_KERNEL_BWD=pallas`` with
+                                 autotuned tiles (interpret-mode off-TPU;
+                                 recorded for the tile-tuning trajectory,
+                                 not expected to win on CPU).
+
+The fwd kernel tiles AND the dgrad/wgrad tiles come from the autotuner —
+the suite pre-tunes them the same way ``launch/train.py --autotune`` does,
+so the recorded numbers are what a tuned training run sees.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro import perf
+from repro.core import dyad, linear
+from repro.optim import AdamW, schedule
+from repro.perf.autotune import autotune_dyad, bwd_ops_for_variant
+from repro.perf.record import hlo_metrics
+
+TOKENS = 2048
+D, FF = 768, 3072            # OPT-125m ff dimensions
+N_DYAD = 4
+VARIANT = "it"
+
+
+def make_adam_step(apply_fn):
+    """(opt, jitted step) for one fwd+bwd+AdamW iteration over an ff block
+    ``{"up": ..., "down": ...}``.  Shared with the smoke suite's tiny
+    train-step cells so both gates measure the same computation."""
+    opt = AdamW(lr=schedule.constant(1e-3))
+
+    def loss(p, x):
+        h = jax.nn.relu(apply_fn(p["up"], x, "up"))
+        y = apply_fn(p["down"], h, "down")
+        return (y ** 2).mean()
+
+    def step(state, x):
+        params, opt_state = state
+        grads = jax.grad(loss)(params, x)
+        new_params, new_opt, _ = opt.update(grads, opt_state, params)
+        return new_params, new_opt
+
+    return opt, jax.jit(step)
+
+
+def dyad_ff_apply(spec_up, spec_down=None):
+    spec_down = spec_down if spec_down is not None else spec_up
+
+    def apply_fn(p, x, which):
+        return dyad.apply(p, x, spec_up if which == "up" else spec_down)
+    return apply_fn
+
+
+def _cells():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (TOKENS, D))
+    shape = (TOKENS, D, FF)
+
+    # dense baseline
+    pd = {"up": linear.init(key, D, FF), "down": linear.init(key, FF, D)}
+    opt, step = make_adam_step(lambda p, x, _: linear.apply(p, x))
+    sd = (pd, opt.init(pd))
+    t_dense = time_fn(step, sd, x, iters=7, warmup=2)
+    emit("train_ff_dense", t_dense, shape=shape, ratio=1.00)
+
+    def dyad_cell(name, use_kernel_bwd, **metrics):
+        su = dyad.DyadSpec(n_dyad=N_DYAD, variant=VARIANT, use_kernel=True,
+                           use_kernel_bwd=use_kernel_bwd)
+        p = {"up": dyad.init(key, D, FF, su), "down": dyad.init(key, FF, D, su)}
+        opt, step = make_adam_step(dyad_ff_apply(su))
+        st = (p, opt.init(p))
+        t = time_fn(step, st, x, iters=7, warmup=2)
+        emit(name, t, shape=shape, ratio=round(t_dense / t, 3), **metrics)
+        return t, step, st
+
+    t_einsum, _, _ = dyad_cell("train_ff_dyad_einsum_vjp", False)
+    t_fused, step_f, st_f = dyad_cell("train_ff_dyad_fused_bwd", True)
+    roof = hlo_metrics(step_f, st_f, x)
+    emit("train_ff_dyad_fused_bwd_roofline", t_fused, shape=shape,
+         fused_vs_einsum_vjp=round(t_einsum / t_fused, 3), **roof)
+    return t_einsum
+
+
+def _pallas_bwd_cell():
+    """Time the true Pallas dgrad/wgrad kernels (tuned tiles) through a
+    jitted grad — interpret-mode off-TPU, so tiles (not wall-parity with
+    XLA) are the deliverable of this cell."""
+    for f_in, f_out in [(D, FF), (FF, D)]:
+        n, d_in, d_out = N_DYAD, f_in // N_DYAD, f_out // N_DYAD
+        for op in ["dyad_mm_blocks"] + bwd_ops_for_variant(VARIANT):
+            autotune_dyad(op, TOKENS, n, d_in, d_out, iters=1, warmup=1)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (TOKENS, D))
+    spec = dyad.DyadSpec(n_dyad=N_DYAD, variant=VARIANT, use_kernel=True)
+    p = {"up": dyad.init(key, D, FF, spec), "down": dyad.init(key, FF, D, spec)}
+
+    def loss(p, x):
+        h = jax.nn.relu(dyad.apply(p["up"], x, spec))
+        return (dyad.apply(p["down"], h, spec) ** 2).mean()
+
+    prev = os.environ.get("REPRO_KERNEL_BWD")
+    os.environ["REPRO_KERNEL_BWD"] = "pallas"
+    try:
+        from repro.kernels import ops as kops
+        kops._make_dyad_mm.cache_clear()      # drop traces of other routes
+        g = jax.jit(jax.grad(loss))
+        t = time_fn(g, p, x, iters=3, warmup=1)
+        emit("train_ff_dyad_pallas_bwd", t, shape=(TOKENS, D, FF),
+             route="pallas_interpret" if jax.default_backend() != "tpu"
+             else "pallas")
+    finally:
+        kops._make_dyad_mm.cache_clear()
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_BWD", None)
+        else:
+            os.environ["REPRO_KERNEL_BWD"] = prev
+
+
+@perf.register("train_step")
+def run():
+    _cells()
+    _pallas_bwd_cell()
+
+
+if __name__ == "__main__":
+    run()

@@ -12,8 +12,10 @@ the last committed baseline.  Mapping to the paper:
 * width_sweep      — Figure 6 (speedup vs model width)
 * mnist            — §3.4.5 (vision probe on CPU)
 * serve_throughput — beyond-paper: end-to-end serving tokens/sec
-* smoke            — tiny CI suite (< 1 min): one dense-vs-dyad cell plus
-                     an autotune cache exercise
+* train_step       — §1 headline (training speed): full fwd+bwd+AdamW step
+                     on DYAD vs DENSE ff blocks, einsum-VJP vs fused bwd
+* smoke            — tiny CI suite (< 1 min): dense-vs-dyad ff + train-step
+                     cells plus an autotune cache exercise
 
 Roofline terms (EXPERIMENTS §Roofline) come from the dry-run
 (``python -m repro.launch.dryrun``), which needs the 512-device env and is
@@ -43,7 +45,7 @@ def main(argv=None) -> int:
     # importing the suite modules registers them (repro.perf.register)
     from benchmarks import (bench_ff_timing, bench_memory, bench_mnist,  # noqa: F401
                             bench_quality, bench_serve_throughput,
-                            bench_smoke, bench_width_sweep)
+                            bench_smoke, bench_train_step, bench_width_sweep)
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite", action="append", default=None,

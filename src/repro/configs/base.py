@@ -25,8 +25,10 @@ DENSE = factory.DENSE
 def linear_cfg(spec: str) -> factory.LinearCfg:
     """Parse "dense" | "dyad_it" | "dyad_ot_8" | "dyad_dt_4_cat" |
     "dyad_it_4_fused" (mixed-variant fused ff; EXPERIMENTS §Perf) |
-    "dyad_it_4_kernel" (route through the fused Pallas kernel with
-    autotuned tiles; interpret-mode on CPU)."""
+    "dyad_it_4_kernel" (route through the fused Pallas kernels — forward
+    AND backward — with autotuned tiles; interpret-mode on CPU) |
+    "dyad_it_4_kernel_einsumbwd" (kernel forward, einsum-VJP oracle
+    backward — the use_kernel_bwd=False escape hatch)."""
     if spec == "dense":
         return DENSE
     parts = spec.split("_")
@@ -35,7 +37,9 @@ def linear_cfg(spec: str) -> factory.LinearCfg:
     n = int(parts[2]) if len(parts) > 2 and parts[2].isdigit() else 4
     return factory.LinearCfg(impl="dyad", n_dyad=n, variant=variant,
                              cat="cat" in parts, fuse_mlp="fused" in parts,
-                             use_kernel="kernel" in parts, scope="ff")
+                             use_kernel="kernel" in parts,
+                             use_kernel_bwd="einsumbwd" not in parts,
+                             scope="ff")
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,8 @@ class DyadSpec:
     variant: str = "it"           # "it" | "ot" | "dt"
     cat: bool = False             # paper's -CAT: one bmm over 2*n_dyad blocks
     use_kernel: bool = False      # route through the Pallas kernel (TPU target)
+    use_kernel_bwd: bool = True   # fused Pallas backward (only with use_kernel;
+                                  # False = einsum-VJP oracle escape hatch)
 
     def __post_init__(self):
         if self.variant not in VARIANTS:
@@ -131,7 +133,8 @@ def apply(params: Params, x: jax.Array, spec: DyadSpec) -> jax.Array:
     if spec.use_kernel:
         from repro.kernels import ops as kops
 
-        y = kops.dyad_mm(x, w1, w2, variant=spec.variant)
+        y = kops.dyad_mm(x, w1, w2, variant=spec.variant,
+                         use_kernel_bwd=spec.use_kernel_bwd)
     else:
         w1, w2 = w1.astype(x.dtype), w2.astype(x.dtype)
         x1, x2 = _block_views(x, n, d_in, spec.variant)

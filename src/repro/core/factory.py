@@ -37,6 +37,7 @@ class LinearCfg:
     variant: str = "it"            # "it" | "ot" | "dt"
     cat: bool = False
     use_kernel: bool = False
+    use_kernel_bwd: bool = True    # fused Pallas backward (with use_kernel)
     scope: str = "ff"              # which sites receive DYAD when impl == "dyad"
     # beyond-paper (paper Future Work §4.i — heterogeneous variant mix):
     # fuse the ff module with up=IT / down=OT and a 3-D block-layout hidden,
@@ -58,7 +59,8 @@ class LinearCfg:
     def spec(self, f_in: int, f_out: int) -> dyad.DyadSpec:
         n = dyad.resolve_n_dyad(f_in, f_out, self.n_dyad)
         return dyad.DyadSpec(
-            n_dyad=n, variant=self.variant, cat=self.cat, use_kernel=self.use_kernel
+            n_dyad=n, variant=self.variant, cat=self.cat,
+            use_kernel=self.use_kernel, use_kernel_bwd=self.use_kernel_bwd
         )
 
 

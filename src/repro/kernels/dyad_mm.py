@@ -1,9 +1,28 @@
-"""Fused DYAD matmul Pallas TPU kernel.
+"""Fused DYAD matmul Pallas TPU kernels — forward AND backward.
 
-One ``pallas_call`` computes BOTH dyad components into a single VMEM-resident
-fp32 accumulator:
+Forward: one ``pallas_call`` computes BOTH dyad components into a single
+VMEM-resident fp32 accumulator:
 
     out[b, g, o] = sum_k x1[b, g, k] * w1[g, o, k] + x2[b, g, k] * w2[g, o, k]
+
+Backward: two more fused kernels keep the whole training hot path on Pallas
+tiles (``kernels/ops.py`` routes its custom VJP through them):
+
+* ``dyad_mm_dgrad``      — dx[b, g, i] = sum_o z1[b,g,o]*w1[g,o,i]
+                                       + z2[b,g,o]*w2[g,o,i]
+  (cotangent x transposed blocks, both components fused into ONE fp32
+  accumulator — the add that ``ref.unview`` otherwise does in jnp);
+* ``dyad_mm_dgrad_two``  — same contraction but the two components are
+  emitted separately (variants whose input views live in different
+  layouts: the caller applies the inverse re-view, then adds);
+* ``dyad_mm_wgrad``      — dw1[g,o,i] = sum_b z1[b,g,o]*x1[b,g,i] and
+  dw2 likewise, both weight grads in one grid with two fp32 accumulator
+  tiles (the batch reduction never leaves VMEM).
+
+No kernel ever materializes a transposed weight: the dgrad contraction runs
+over the ``o`` axis of the SAME ``(n, d_out, d_in)`` weight tiles the forward
+streams, and wgrad contracts the batch axis of the activation/cotangent
+tiles directly.
 
 This goes beyond the paper's ``-CAT`` trick: instead of concatenating the two
 components into one ``2*n_dyad``-block bmm (which still materializes the
@@ -286,3 +305,285 @@ def dyad_mm_blocks(
     if plan.padded_b != B or plan.padded_o != d_out:
         out = out[:B, :, :d_out]
     return out
+
+
+# -- backward: dgrad (input cotangent) ----------------------------------------
+#
+# Grid ``(n, B/bB, d_in/bI, d_out/bK)`` — the reduction now runs over the
+# OUTPUT feature axis ``o``, innermost so the dx accumulator tile is revisited
+# on consecutive steps.  Tile roles for the autotune ``blocks`` dict keep the
+# layer-natural names: ``block_o`` tiles the produced feature axis (d_in here),
+# ``block_k`` tiles the contracted one (d_out here).
+
+
+def _dgrad_kernel(z1_ref, z2_ref, w1_ref, w2_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # (bB, bK) x (bK, bI) -> (bB, bI): contract z's o axis with w's o axis —
+    # the transposed-block product without ever transposing the weight tile.
+    dn = (((1,), (0,)), ((), ()))
+    acc_ref[...] += jax.lax.dot_general(
+        z1_ref[:, 0, :], w1_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    acc_ref[...] += jax.lax.dot_general(
+        z2_ref[:, 0, :], w2_ref[0], dn, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[:, 0, :] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dgrad_kernel_two(z1_ref, z2_ref, w1_ref, w2_ref, o1_ref, o2_ref,
+                      acc1_ref, acc2_ref, *, nk: int):
+    """Two-accumulator dgrad for variants whose per-component input views
+    live in different layouts (IT/DT: component 2's dx must be un-permuted
+    before the add, which is a re-view the caller applies)."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    dn = (((1,), (0,)), ((), ()))
+    acc1_ref[...] += jax.lax.dot_general(
+        z1_ref[:, 0, :], w1_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    acc2_ref[...] += jax.lax.dot_general(
+        z2_ref[:, 0, :], w2_ref[0], dn, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o1_ref[:, 0, :] = acc1_ref[...].astype(o1_ref.dtype)
+        o2_ref[:, 0, :] = acc2_ref[...].astype(o2_ref.dtype)
+
+
+def _dgrad_specs(bB: int, bI: int, bK: int):
+    z_spec = pl.BlockSpec((bB, 1, bK), lambda g, b, i, k: (b, g, k))
+    w_spec = pl.BlockSpec((1, bK, bI), lambda g, b, i, k: (g, k, i))
+    o_spec = pl.BlockSpec((bB, 1, bI), lambda g, b, i, k: (b, g, i))
+    return z_spec, w_spec, o_spec
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bB", "bI", "bK", "fused", "interpret")
+)
+def _dgrad_impl(z1, z2, w1, w2, *, bB: int, bI: int, bK: int, fused: bool,
+                interpret: bool):
+    B, n, d_out = z1.shape
+    _, _, d_in = w1.shape
+    nk = d_out // bK
+    grid = (n, B // bB, d_in // bI, nk)
+    z_spec, w_spec, o_spec = _dgrad_specs(bB, bI, bK)
+    out_sds = jax.ShapeDtypeStruct((B, n, d_in), z1.dtype)
+    acc = pltpu.VMEM((bB, bI), jnp.float32)
+
+    if fused:
+        return pl.pallas_call(
+            functools.partial(_dgrad_kernel, nk=nk),
+            grid=grid,
+            in_specs=[z_spec, z_spec, w_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_sds,
+            scratch_shapes=[acc],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel",
+                                     "arbitrary"),
+            ),
+            interpret=interpret,
+        )(z1, z2, w1, w2)
+    return pl.pallas_call(
+        functools.partial(_dgrad_kernel_two, nk=nk),
+        grid=grid,
+        in_specs=[z_spec, z_spec, w_spec, w_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[out_sds, out_sds],
+        scratch_shapes=[acc, acc],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(z1, z2, w1, w2)
+
+
+def _dgrad_prepare(op: str, z1, z2, w1, w2, block_b, block_o, block_k):
+    B, n, d_out = z1.shape
+    _, _, d_in = w1.shape
+    bb, bo, bk = resolve_blocks(op, B, n, d_in, d_out, z1.dtype,
+                                block_b, block_o, block_k)
+    # produced axis = d_in (tiled by block_o), contracted axis = d_out
+    plan = plan_tiles(B, d_in, d_out, bb, bo, bk)
+    db, di, dk = (plan.padded_b - B, plan.padded_o - d_in,
+                  plan.padded_k - d_out)
+    if db or dk:
+        z1 = jnp.pad(z1, ((0, db), (0, 0), (0, dk)))
+        z2 = jnp.pad(z2, ((0, db), (0, 0), (0, dk)))
+    if di or dk:
+        w1 = jnp.pad(w1, ((0, 0), (0, dk), (0, di)))
+        w2 = jnp.pad(w2, ((0, 0), (0, dk), (0, di)))
+    return z1, z2, w1, w2, plan
+
+
+def dyad_mm_dgrad(
+    z1: jax.Array,
+    z2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused input cotangent: both components accumulate into ONE tile.
+
+    z1, z2: (B, n_dyad, d_out) per-component cotangent views.
+    w1, w2: (n_dyad, d_out, d_in).
+    Returns dx (B, n_dyad, d_in), dtype of z1.  Valid whenever both dx
+    components share a layout (the OT variant's input side).
+    """
+    B, _, _ = z1.shape
+    _, _, d_in = w1.shape
+    z1, z2, w1, w2, plan = _dgrad_prepare("dyad_mm_dgrad", z1, z2, w1, w2,
+                                          block_b, block_o, block_k)
+    dx = _dgrad_impl(z1, z2, w1, w2, bB=plan.bB, bI=plan.bO, bK=plan.bK,
+                     fused=True, interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_in:
+        dx = dx[:B, :, :d_in]
+    return dx
+
+
+def dyad_mm_dgrad_two(
+    z1: jax.Array,
+    z2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+):
+    """As :func:`dyad_mm_dgrad` but returns (dx1, dx2) separately (IT/DT)."""
+    B, _, _ = z1.shape
+    _, _, d_in = w1.shape
+    z1, z2, w1, w2, plan = _dgrad_prepare("dyad_mm_dgrad_two", z1, z2, w1, w2,
+                                          block_b, block_o, block_k)
+    dx1, dx2 = _dgrad_impl(z1, z2, w1, w2, bB=plan.bB, bI=plan.bO,
+                           bK=plan.bK, fused=False, interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_in:
+        dx1, dx2 = dx1[:B, :, :d_in], dx2[:B, :, :d_in]
+    return dx1, dx2
+
+
+# -- backward: wgrad (weight cotangents) --------------------------------------
+#
+# Grid ``(n, d_out/bO, d_in/bI, B/bB)`` — the reduction runs over the batch
+# axis, innermost so both (bO, bI) fp32 accumulator tiles are revisited on
+# consecutive steps.  One grid produces BOTH dw1 and dw2: the per-step dots
+# share scheduling, and neither partial sum ever round-trips to HBM.
+
+
+def _wgrad_kernel(x1_ref, x2_ref, z1_ref, z2_ref, o1_ref, o2_ref,
+                  acc1_ref, acc2_ref, *, nb: int):
+    b = pl.program_id(3)
+
+    @pl.when(b == 0)
+    def _init():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    # (bB, bO)^T x (bB, bI) -> (bO, bI): contract the batch axes.
+    dn = (((0,), (0,)), ((), ()))
+    acc1_ref[...] += jax.lax.dot_general(
+        z1_ref[:, 0, :], x1_ref[:, 0, :], dn,
+        preferred_element_type=jnp.float32
+    )
+    acc2_ref[...] += jax.lax.dot_general(
+        z2_ref[:, 0, :], x2_ref[:, 0, :], dn,
+        preferred_element_type=jnp.float32
+    )
+
+    @pl.when(b == nb - 1)
+    def _flush():
+        o1_ref[0, :, :] = acc1_ref[...].astype(o1_ref.dtype)
+        o2_ref[0, :, :] = acc2_ref[...].astype(o2_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bB", "bO", "bI", "out_dtype", "interpret")
+)
+def _wgrad_impl(x1, x2, z1, z2, *, bB: int, bO: int, bI: int,
+                out_dtype: str, interpret: bool):
+    B, n, d_in = x1.shape
+    _, _, d_out = z1.shape
+    nb = B // bB
+    grid = (n, d_out // bO, d_in // bI, nb)
+
+    x_spec = pl.BlockSpec((bB, 1, bI), lambda g, o, i, b: (b, g, i))
+    z_spec = pl.BlockSpec((bB, 1, bO), lambda g, o, i, b: (b, g, o))
+    o_spec = pl.BlockSpec((1, bO, bI), lambda g, o, i, b: (g, o, i))
+    out_sds = jax.ShapeDtypeStruct((n, d_out, d_in), jnp.dtype(out_dtype))
+    acc = pltpu.VMEM((bO, bI), jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_wgrad_kernel, nb=nb),
+        grid=grid,
+        in_specs=[x_spec, x_spec, z_spec, z_spec],
+        out_specs=[o_spec, o_spec],
+        out_shape=[out_sds, out_sds],
+        scratch_shapes=[acc, acc],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x1, x2, z1, z2)
+
+
+def dyad_mm_wgrad(
+    x1: jax.Array,
+    x2: jax.Array,
+    z1: jax.Array,
+    z2: jax.Array,
+    *,
+    out_dtype=None,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+):
+    """Fused weight cotangents with fp32 accumulator tiles.
+
+    x1, x2: (B, n_dyad, d_in) per-component input views (the residuals).
+    z1, z2: (B, n_dyad, d_out) per-component cotangent views.
+    Returns (dw1, dw2): (n_dyad, d_out, d_in) in ``out_dtype`` (defaults to
+    x1's dtype) — the cast happens once, from the fp32 accumulator.
+    """
+    B, n, d_in = x1.shape
+    _, _, d_out = z1.shape
+    out_dtype = jnp.dtype(out_dtype if out_dtype is not None else x1.dtype)
+    bb, bo, bk = resolve_blocks("dyad_mm_wgrad", B, n, d_in, d_out,
+                                x1.dtype, block_b, block_o, block_k)
+    plan = plan_tiles(B, d_out, d_in, bb, bo, bk)
+    db, do, di = (plan.padded_b - B, plan.padded_o - d_out,
+                  plan.padded_k - d_in)
+    if db or di:
+        x1 = jnp.pad(x1, ((0, db), (0, 0), (0, di)))
+        x2 = jnp.pad(x2, ((0, db), (0, 0), (0, di)))
+    if db or do:
+        z1 = jnp.pad(z1, ((0, db), (0, 0), (0, do)))
+        z2 = jnp.pad(z2, ((0, db), (0, 0), (0, do)))
+    dw1, dw2 = _wgrad_impl(x1, x2, z1, z2, bB=plan.bB, bO=plan.bO,
+                           bI=plan.bK, out_dtype=str(out_dtype),
+                           interpret=interpret)
+    if plan.padded_o != d_out or plan.padded_k != d_in:
+        dw1, dw2 = dw1[:, :d_out, :d_in], dw2[:, :d_out, :d_in]
+    return dw1, dw2

@@ -1,66 +1,121 @@
-"""jit'd differentiable wrapper around the fused DYAD Pallas kernel.
+"""jit'd differentiable wrapper around the fused DYAD Pallas kernels.
 
 ``dyad_mm(x, w1, w2, variant=...)`` is the public op:
 
 * forward — builds the two strided block views (pure re-views, folded into the
-  operands' layouts by XLA) and calls the fused kernel;
-* backward — custom VJP in pure jnp einsums (the transposed products are plain
-  bmms that XLA maps straight onto the MXU; the permutations are bijective so
-  the cotangent "un-views" are exact inverses of the forward views).
+  operands' layouts by XLA) and calls the fused forward kernel;
+* backward — custom VJP routed through the fused backward dataflow
+  (``use_kernel_bwd=True``, the default): on TPU the Pallas kernels
+  (:func:`repro.kernels.dyad_mm.dyad_mm_dgrad` / ``dyad_mm_dgrad_two`` for
+  the input cotangent, ``dyad_mm_wgrad`` for both weight cotangents, all
+  with fp32 accumulator tiles); on other backends a compiled XLA lowering
+  of the SAME dataflow (:func:`_bwd_direct`) — it contracts directly in the
+  permuted layouts so none of the strided views (``x2``, ``z2bar``) or the
+  ``dx2`` un-view are ever materialized, and accumulates in fp32 exactly
+  like the kernel.  The Pallas interpreter is NOT on the non-TPU hot path:
+  its grid loop re-carries every operand per step, which is right for
+  bit-level validation (tests pass ``interpret=True`` explicitly) and wrong
+  for throughput.  Set ``REPRO_KERNEL_BWD=pallas`` to force the Pallas
+  route off-TPU (validation/timing of the true kernels), or
+  ``REPRO_KERNEL_BWD=xla`` to force the compiled fallback on TPU.
 
-On non-TPU backends the kernel runs in ``interpret=True`` mode, which executes
-the kernel body in Python for bit-correct validation on CPU.
+The pre-kernel einsum backward survives as the oracle
+(:func:`repro.kernels.ref.dyad_mm_bwd_ref`), selectable with
+``use_kernel_bwd=False`` — gradient-equivalence tests pin every route
+against it to fp32 tolerance.
 
-Tile sizes: the calls below pass no explicit ``block_*``, so the kernel
-wrappers resolve tiles from the autotune cache per (shape, dtype, backend)
-— see :mod:`repro.perf.autotune`.  Run the tuner (or construct the serve
-engine with ``autotune=True``) BEFORE the first trace of a jitted caller:
-the resolved tiles are baked into the trace.
+Variant dataflow in the backward (the permutations are bijective, so the
+cotangent "un-views" are exact inverses of the forward views):
+
+* ``ot`` — both dx components land block-contiguous, so ONE fused
+  accumulator computes ``dx = z1bar.w1 + z2bar.w2`` in-kernel;
+* ``it``/``dt`` — component 2's dx lives in the permuted layout, so the
+  kernel emits both products and the zero-copy un-view + add happens here
+  (the XLA fallback instead writes component 2 directly into the permuted
+  layout: ``bgo,goi->big``).
+
+On non-TPU backends the forward kernel runs in ``interpret=True`` mode,
+which executes the kernel body in Python for bit-correct validation on CPU.
+
+Tile sizes: the kernel calls below pass no explicit ``block_*``, so the
+wrappers resolve tiles from the autotune cache per (op, shape, dtype,
+backend) — see :mod:`repro.perf.autotune`.  Run the tuner
+(``launch/train.py --autotune``, ``launch/serve.py --autotune``, or
+``ensure_tuned_for_model``) BEFORE the first trace of a jitted caller: the
+resolved tiles are baked into the trace, including the ``value_and_grad``
+trace of a train step.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.dyad_mm import dyad_mm_blocks, dyad_mm_blocks_two
+from repro.kernels.dyad_mm import (dyad_mm_blocks, dyad_mm_blocks_two,
+                                   dyad_mm_dgrad, dyad_mm_dgrad_two,
+                                   dyad_mm_wgrad)
 
 
 def _interpret() -> bool:
     """Single source of truth for the kernel execution mode — the autotuner
     and benchmarks reuse this so tuned tiles are measured the same way the
-    serving hot path runs them."""
+    serving and training hot paths run them."""
     return jax.default_backend() != "tpu"
 
 
-def _split_cotangent(g, n: int, variant: str):
-    """g: (..., f_out) -> (z1bar, z2bar): (..., n, d_out) per-component."""
-    d_out = g.shape[-1] // n
-    lead = g.shape[:-1]
-    z1bar = g.reshape(*lead, n, d_out)
-    if variant in ("ot", "dt"):
-        z2bar = jnp.swapaxes(g.reshape(*lead, d_out, n), -1, -2)
-    else:
-        z2bar = z1bar
-    return z1bar, z2bar
+def _use_pallas_bwd() -> bool:
+    """Route the backward through the Pallas kernels?  TPU: yes (that is
+    the hot path they exist for).  Elsewhere: only when forced with
+    ``REPRO_KERNEL_BWD=pallas`` — the default is the compiled XLA lowering
+    of the same dataflow (:func:`_bwd_direct`).  Checked at trace time."""
+    forced = os.environ.get("REPRO_KERNEL_BWD", "").lower()
+    if forced == "pallas":
+        return True
+    if forced == "xla":
+        return False
+    return jax.default_backend() == "tpu"
 
 
-def _unview(dx1, dx2, variant: str):
-    """Fold per-view input cotangents back onto the flat feature axis."""
-    lead = dx1.shape[:-2]
-    f_in = dx1.shape[-2] * dx1.shape[-1]
-    out = dx1.reshape(*lead, f_in)
-    if variant in ("it", "dt"):
-        out = out + jnp.swapaxes(dx2, -1, -2).reshape(*lead, f_in)
-    else:
-        out = out + dx2.reshape(*lead, f_in)
-    return out
+def _bwd_direct(x2d, w1, w2, g2d, variant: str):
+    """Compiled non-TPU lowering of the fused kernel backward.
+
+    Mirrors dgrad/wgrad kernel semantics — fp32 accumulation, component
+    fusion — but expressed as direct-layout contractions: the BLOCKTRANS
+    operand is read through the free ``(B, d, n)`` reshape (``big`` /
+    ``bog`` subscripts) and component 2's dx is PRODUCED in the permuted
+    layout, so unlike the einsum oracle no ``x2`` / ``z2bar`` / un-view
+    copy is ever materialized.
+    """
+    B, f_in = x2d.shape
+    n, d_out, d_in = w1.shape
+    f32 = jnp.float32
+    x1 = x2d.reshape(B, n, d_in)
+    xr = x2d.reshape(B, d_in, n)          # x2[b,g,i] == xr[b,i,g]
+    z1 = g2d.reshape(B, n, d_out)
+    gr = g2d.reshape(B, d_out, n)         # z2bar[b,g,o] == gr[b,o,g]
+
+    dw1 = jnp.einsum("bgi,bgo->goi", x1, z1, preferred_element_type=f32)
+    dx1 = jnp.einsum("bgo,goi->bgi", z1, w1, preferred_element_type=f32)
+    if variant == "it":
+        dw2 = jnp.einsum("big,bgo->goi", xr, z1, preferred_element_type=f32)
+        dx2r = jnp.einsum("bgo,goi->big", z1, w2, preferred_element_type=f32)
+        dx = dx1.reshape(B, f_in) + dx2r.reshape(B, f_in)
+    elif variant == "ot":
+        dw2 = jnp.einsum("bgi,bog->goi", x1, gr, preferred_element_type=f32)
+        dx2 = jnp.einsum("bog,goi->bgi", gr, w2, preferred_element_type=f32)
+        dx = (dx1 + dx2).reshape(B, f_in)
+    else:  # "dt"
+        dw2 = jnp.einsum("big,bog->goi", xr, gr, preferred_element_type=f32)
+        dx2r = jnp.einsum("bog,goi->big", gr, w2, preferred_element_type=f32)
+        dx = dx1.reshape(B, f_in) + dx2r.reshape(B, f_in)
+    return dx, dw1, dw2
 
 
 @functools.lru_cache(maxsize=None)
-def _make_dyad_mm(variant: str):
+def _make_dyad_mm(variant: str, use_kernel_bwd: bool = True):
     @jax.custom_vjp
     def op(x, w1, w2):
         n, d_out, _ = w1.shape
@@ -83,22 +138,50 @@ def _make_dyad_mm(variant: str):
     def fwd(x, w1, w2):
         return op(x, w1, w2), (x, w1, w2)
 
-    def bwd(resids, g):
+    def bwd_einsum(resids, g):
+        x, w1, w2 = resids
+        return ref.dyad_mm_bwd_ref(x, w1, w2, g, variant=variant)
+
+    def bwd_kernel(resids, g):
         x, w1, w2 = resids
         n = w1.shape[0]
-        x1, x2 = ref.block_views(x, n, variant)
-        z1bar, z2bar = _split_cotangent(g, n, variant)
-        dw1 = jnp.einsum("...gi,...go->goi", x1, z1bar).astype(w1.dtype)
-        dw2 = jnp.einsum("...gi,...go->goi", x2, z2bar).astype(w2.dtype)
-        dx1 = jnp.einsum("...go,goi->...gi", z1bar, w1.astype(g.dtype))
-        dx2 = jnp.einsum("...go,goi->...gi", z2bar, w2.astype(g.dtype))
-        dx = _unview(dx1, dx2, variant).astype(x.dtype)
-        return dx, dw1, dw2
+        lead = x.shape[:-1]
+        f_in = x.shape[-1]
+        x2d = x.reshape(-1, f_in)
+        g2d = g.reshape(-1, g.shape[-1]).astype(x.dtype)
+        w1c, w2c = w1.astype(x.dtype), w2.astype(x.dtype)
 
-    op.defvjp(fwd, bwd)
+        if not _use_pallas_bwd():
+            dx, dw1, dw2 = _bwd_direct(x2d, w1c, w2c, g2d, variant)
+            return (dx.reshape(*lead, f_in).astype(x.dtype),
+                    dw1.astype(w1.dtype), dw2.astype(w2.dtype))
+
+        x1, x2 = ref.block_views(x2d, n, variant)
+        z1bar, z2bar = ref.split_cotangent(g2d, n, variant)
+        interpret = _interpret()
+        if variant == "ot":
+            # both dx components are block-contiguous: fused single-tile
+            # accumulate in-kernel (the add the einsum oracle does in jnp).
+            dx3 = dyad_mm_dgrad(z1bar, z2bar, w1c, w2c, interpret=interpret)
+            dx = dx3.reshape(-1, f_in)
+        else:
+            dx1, dx2 = dyad_mm_dgrad_two(z1bar, z2bar, w1c, w2c,
+                                         interpret=interpret)
+            dx = ref.unview(dx1, dx2, variant)
+        dw1, dw2 = dyad_mm_wgrad(x1, x2, z1bar, z2bar, out_dtype=w1.dtype,
+                                 interpret=interpret)
+        return (dx.reshape(*lead, f_in).astype(x.dtype), dw1,
+                dw2.astype(w2.dtype))
+
+    op.defvjp(fwd, bwd_kernel if use_kernel_bwd else bwd_einsum)
     return op
 
 
-def dyad_mm(x, w1, w2, *, variant: str = "it"):
-    """Fused DYAD matmul: (..., f_in) -> (..., f_out), no bias."""
-    return _make_dyad_mm(variant)(x, w1, w2)
+def dyad_mm(x, w1, w2, *, variant: str = "it", use_kernel_bwd: bool = True):
+    """Fused DYAD matmul: (..., f_in) -> (..., f_out), no bias.
+
+    ``use_kernel_bwd=False`` swaps the backward to the pure-einsum oracle
+    (``ref.dyad_mm_bwd_ref``) — the escape hatch for debugging gradients or
+    backends where the fused backward underperforms.
+    """
+    return _make_dyad_mm(variant, use_kernel_bwd)(x, w1, w2)

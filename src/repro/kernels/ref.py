@@ -42,3 +42,50 @@ def dyad_mm_ref(x, w1, w2, *, variant: str = "it"):
     z1 = jnp.einsum("...gi,goi->...go", x1, w1.astype(x.dtype))
     z2 = jnp.einsum("...gi,goi->...go", x2, w2.astype(x.dtype))
     return combine(z1, z2, variant)
+
+
+def split_cotangent(g, n: int, variant: str):
+    """(z1bar, z2bar): per-component views of the output cotangent
+    ``g: (..., f_out)`` -> ``(..., n, d_out)`` each.  The split mirrors
+    the output layouts of :func:`combine`: component 1 is always
+    block-contiguous; component 2 is the strided re-view for ot/dt."""
+    d_out = g.shape[-1] // n
+    lead = g.shape[:-1]
+    z1bar = g.reshape(*lead, n, d_out)
+    if variant in ("ot", "dt"):
+        z2bar = jnp.swapaxes(g.reshape(*lead, d_out, n), -1, -2)
+    else:
+        z2bar = z1bar
+    return z1bar, z2bar
+
+
+def unview(dx1, dx2, variant: str):
+    """Fold per-view input cotangents back onto the flat feature axis —
+    the exact inverse of :func:`block_views` (the permutations are
+    bijective), summing the two components."""
+    lead = dx1.shape[:-2]
+    f_in = dx1.shape[-2] * dx1.shape[-1]
+    out = dx1.reshape(*lead, f_in)
+    if variant in ("it", "dt"):
+        out = out + jnp.swapaxes(dx2, -1, -2).reshape(*lead, f_in)
+    else:
+        out = out + dx2.reshape(*lead, f_in)
+    return out
+
+
+def dyad_mm_bwd_ref(x, w1, w2, g, *, variant: str = "it"):
+    """Pure-einsum VJP oracle for :func:`dyad_mm_ref` — what the kernel
+    backward (:func:`repro.kernels.dyad_mm.dyad_mm_dgrad` /
+    ``dyad_mm_wgrad``) must reproduce to fp32 tolerance.
+
+    Returns ``(dx, dw1, dw2)`` for output cotangent ``g: (..., f_out)``.
+    """
+    n = w1.shape[0]
+    x1, x2 = block_views(x, n, variant)
+    z1bar, z2bar = split_cotangent(g, n, variant)
+    dw1 = jnp.einsum("...gi,...go->goi", x1, z1bar).astype(w1.dtype)
+    dw2 = jnp.einsum("...gi,...go->goi", x2, z2bar).astype(w2.dtype)
+    dx1 = jnp.einsum("...go,goi->...gi", z1bar, w1.astype(g.dtype))
+    dx2 = jnp.einsum("...go,goi->...gi", z2bar, w2.astype(g.dtype))
+    dx = unview(dx1, dx2, variant).astype(x.dtype)
+    return dx, dw1, dw2

@@ -38,12 +38,28 @@ def main():
     ap.add_argument("--compress", default="none",
                     choices=["none", "int8", "topk"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="pre-tune Pallas kernel tiles (forward AND the "
+                         "dgrad/wgrad backward ops) for this model's dyad "
+                         "shapes before the train step compiles "
+                         "(repro.perf); only meaningful with a "
+                         "kernel-routed linear spec, e.g. "
+                         "--linear dyad_it_4_kernel")
     args = ap.parse_args()
 
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
     print(f"[train] arch={cfg.name} family={cfg.family} "
           f"linear={cfg.linear.impl}({cfg.linear.variant},n={cfg.linear.n_dyad})")
+
+    if args.autotune:
+        # tune BEFORE the first jit trace: the train step's value_and_grad
+        # resolves fwd + dgrad/wgrad tiles at trace time (batch*seq rows).
+        from repro.perf.autotune import ensure_tuned_for_model
+
+        tuned = ensure_tuned_for_model(cfg, tokens=args.batch * args.seq_len,
+                                       include_bwd=True)
+        print(f"[train] autotuned {len(tuned)} kernel-shape entries")
 
     opt = AdamW(lr=schedule.warmup_cosine(args.lr, args.steps // 10 + 1,
                                           args.steps))

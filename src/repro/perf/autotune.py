@@ -162,18 +162,27 @@ def _dtype_bytes(dtype: str) -> int:
 
 
 def vmem_estimate(bb: int, bo: int, bk: int, dtype: str,
-                  n_acc: int = 1) -> int:
-    """Double-buffered VMEM footprint of one grid step of the fused kernel:
-    two x tiles + two w tiles streamed, one (or two) output tiles, plus the
-    fp32 accumulator scratch."""
+                  n_acc: int = 1, wgrad: bool = False) -> int:
+    """Double-buffered VMEM footprint of one grid step.
+
+    Forward/dgrad tile roles: two (bb, bk) activation tiles + two (bo, bk)
+    weight tiles streamed, n_acc (bb, bo) output tiles, fp32 accumulators of
+    the same shape.  wgrad contracts the BATCH axis instead: two (bb, bk) x
+    tiles + two (bb, bo) z tiles streamed, and the outputs/accumulators are
+    weight-shaped (bo, bk)."""
     ib = _dtype_bytes(dtype)
-    stream = 2 * (2 * bb * bk + 2 * bo * bk + n_acc * bb * bo) * ib
-    acc = 4 * n_acc * bb * bo
+    if wgrad:
+        stream = 2 * (2 * bb * bk + 2 * bb * bo + n_acc * bo * bk) * ib
+        acc = 4 * n_acc * bo * bk
+    else:
+        stream = 2 * (2 * bb * bk + 2 * bo * bk + n_acc * bb * bo) * ib
+        acc = 4 * n_acc * bb * bo
     return stream + acc
 
 
 def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
                      dtype: str = "float32", n_acc: int = 1,
+                     wgrad: bool = False,
                      max_candidates: int = 32) -> List[Blocks]:
     """Power-of-two tile sweep clamped to the (bucketed) dims and filtered
     by the VMEM budget.  Always contains the hardcoded default."""
@@ -189,7 +198,8 @@ def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
         if sig in seen:
             continue
         seen.add(sig)
-        if vmem_estimate(*sig, dtype=dtype, n_acc=n_acc) > VMEM_BUDGET_BYTES:
+        if vmem_estimate(*sig, dtype=dtype, n_acc=n_acc,
+                         wgrad=wgrad) > VMEM_BUDGET_BYTES:
             continue
         out.append(dict(cand))
         if len(out) >= max_candidates:
@@ -208,9 +218,15 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
                   force: bool = False) -> Tuple[Blocks, float]:
     """Sweep block sizes for one kernel shape; persist and return the winner.
 
-    ``op`` is ``"dyad_mm_blocks"``, ``"dyad_mm_blocks_two"`` or
-    ``"dense_bmm"`` (the baseline).  Returns ``(blocks, best_us)``.  A cache
-    hit short-circuits the sweep unless ``force=True``.
+    ``op`` is one of ``"dyad_mm_blocks"`` / ``"dyad_mm_blocks_two"`` (the
+    forward kernels), ``"dyad_mm_dgrad"`` / ``"dyad_mm_dgrad_two"`` /
+    ``"dyad_mm_wgrad"`` (the backward kernels — dgrad contracts d_out and
+    produces d_in, so its ``block_o`` tiles d_in and ``block_k`` tiles
+    d_out; wgrad contracts the batch axis), or ``"dense_bmm"`` (the
+    baseline).  ``(B, n, d_in, d_out)`` always names the LAYER-natural
+    dims, the same key the trace-time lookup uses.  Returns
+    ``(blocks, best_us)``.  A cache hit short-circuits the sweep unless
+    ``force=True``.
     """
     import jax
     import jax.numpy as jnp
@@ -243,21 +259,45 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     from repro.kernels import dyad_mm
     from repro.kernels.ops import _interpret
 
-    kernel = {"dyad_mm_blocks": dyad_mm.dyad_mm_blocks,
-              "dyad_mm_blocks_two": dyad_mm.dyad_mm_blocks_two}[op]
-    n_acc = 2 if op == "dyad_mm_blocks_two" else 1
+    n_acc = 1 if op in ("dyad_mm_blocks", "dyad_mm_dgrad") else 2
     interpret = _interpret()
+
+    if op in ("dyad_mm_dgrad", "dyad_mm_dgrad_two"):
+        # dgrad consumes per-component cotangents (B, n, d_out)
+        z1 = jax.random.normal(jax.random.fold_in(kx, 4), (B, n, d_out), kd)
+        z2 = jax.random.normal(jax.random.fold_in(kx, 5), (B, n, d_out), kd)
+        kfn = {"dyad_mm_dgrad": dyad_mm.dyad_mm_dgrad,
+               "dyad_mm_dgrad_two": dyad_mm.dyad_mm_dgrad_two}[op]
+        kernel = lambda **c: kfn(z1, z2, w1, w2, interpret=interpret, **c)
+        # produced axis is d_in, contracted is d_out: swap the feature dims
+        # for candidate clamping and effective-tile dedup
+        plan_dims = (B, d_in, d_out)
+        cand_dims = (d_out, d_in)
+    elif op == "dyad_mm_wgrad":
+        z1 = jax.random.normal(jax.random.fold_in(kx, 4), (B, n, d_out), kd)
+        z2 = jax.random.normal(jax.random.fold_in(kx, 5), (B, n, d_out), kd)
+        kernel = lambda **c: dyad_mm.dyad_mm_wgrad(
+            x1, x2, z1, z2, interpret=interpret, **c)
+        plan_dims = (B, d_out, d_in)
+        cand_dims = (d_in, d_out)
+    else:
+        kfn = {"dyad_mm_blocks": dyad_mm.dyad_mm_blocks,
+               "dyad_mm_blocks_two": dyad_mm.dyad_mm_blocks_two}[op]
+        kernel = lambda **c: kfn(x1, x2, w1, w2, interpret=interpret, **c)
+        plan_dims = (B, d_out, d_in)
+        cand_dims = (d_in, d_out)
 
     best: Optional[Blocks] = None
     best_us = float("inf")
     cands = list(candidates) if candidates is not None else candidate_blocks(
-        B, n, d_in, d_out, dtype, n_acc=n_acc)
+        B, n, cand_dims[0], cand_dims[1], dtype, n_acc=n_acc,
+        wgrad=(op == "dyad_mm_wgrad"))
     # distinct requested blocks can clamp to identical EFFECTIVE tiles for
     # this concrete shape — timing those again only measures noise
     seen_plans = set()
     deduped = []
     for cand in cands:
-        plan = dyad_mm.plan_tiles(B, d_out, d_in, cand["block_b"],
+        plan = dyad_mm.plan_tiles(*plan_dims, cand["block_b"],
                                   cand["block_o"], cand["block_k"])
         if plan in seen_plans:
             continue
@@ -266,10 +306,8 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     cands = deduped
     for cand in cands:
         try:
-            us = _time_us(
-                lambda c=cand: kernel(x1, x2, w1, w2, interpret=interpret,
-                                      **c),
-                iters=iters, warmup=warmup)
+            us = _time_us(lambda c=cand: kernel(**c),
+                          iters=iters, warmup=warmup)
         except Exception as e:       # invalid tiling for this backend/shape
             warnings.warn(f"repro.perf: candidate {cand} failed for "
                           f"{key}: {e}")
@@ -309,22 +347,37 @@ def model_dyad_shapes(cfg) -> List[Tuple[int, int, int]]:
     return sorted(shapes)
 
 
+def bwd_ops_for_variant(variant: str) -> List[str]:
+    """The backward kernel ops a DYAD variant routes through: OT's two dx
+    components share a layout (ONE fused dgrad accumulator); IT/DT emit the
+    components separately.  wgrad is variant-independent."""
+    dgrad = "dyad_mm_dgrad" if variant == "ot" else "dyad_mm_dgrad_two"
+    return [dgrad, "dyad_mm_wgrad"]
+
+
 def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
-                           iters: int = 2) -> Dict[str, Blocks]:
+                           iters: int = 2,
+                           include_bwd: bool = False) -> Dict[str, Blocks]:
     """Pre-tune every fused-kernel shape a model will hit with ``tokens``
-    rows (decode: batch; prefill: batch*seq).  Serving calls this at engine
-    construction so the first jit trace already picks tuned tiles.  No-op
-    (empty dict) for configs that don't use the Pallas kernel.
+    rows (decode: batch; prefill: batch*seq; train: batch*seq).  Serving
+    calls this at engine construction — and ``launch/train.py --autotune``
+    calls it with ``include_bwd=True`` — so the first jit trace already
+    picks tuned tiles (a ``value_and_grad`` trace resolves the dgrad/wgrad
+    tiles at trace time too).  No-op (empty dict) for configs that don't
+    use the Pallas kernel.
 
     ``dtype`` defaults to the config's COMPUTE dtype — ops.py casts weights
     to the activation dtype, so that is the dtype trace-time lookups use."""
     if dtype is None:
         dtype = getattr(cfg, "compute_dtype", None) or "float32"
     tuned: Dict[str, Blocks] = {}
+    variant = getattr(cfg.linear, "variant", "it")
     for n, d_in, d_out in model_dyad_shapes(cfg):
-        variant = getattr(cfg.linear, "variant", "it")
-        op = "dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"
-        blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dtype,
-                                  iters=iters)
-        tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
+        ops = ["dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"]
+        if include_bwd:
+            ops += bwd_ops_for_variant(variant)
+        for op in ops:
+            blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dtype,
+                                      iters=iters)
+            tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
     return tuned

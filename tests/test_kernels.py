@@ -8,7 +8,8 @@ import pytest
 from repro.core import dyad
 from repro.kernels import ops, ref
 from repro.kernels.dyad_mm import (dyad_mm_blocks, dyad_mm_blocks_two,
-                                   plan_tiles)
+                                   dyad_mm_dgrad, dyad_mm_dgrad_two,
+                                   dyad_mm_wgrad, plan_tiles)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -129,3 +130,156 @@ def test_kernel_multi_dim_leading():
     assert y.shape == (2, 3, 5, 16)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5,
                                atol=2e-5)
+
+
+# -- fused backward kernels ---------------------------------------------------
+
+
+BWD_SHAPES = [
+    # (B, n, d_in, d_out): healthy, odd/prime (exercising plan_tiles
+    # padding), and just-past-lane dims
+    (16, 4, 32, 24),
+    (10, 2, 33, 17),
+    (13, 3, 7, 5),
+    (64, 2, 129, 130),
+]
+
+
+@pytest.mark.parametrize("B,n,d_in,d_out", BWD_SHAPES)
+def test_dgrad_kernels_match_einsum(B, n, d_in, d_out):
+    z1 = jax.random.normal(KEY, (B, n, d_out))
+    z2 = jax.random.normal(jax.random.PRNGKey(1), (B, n, d_out))
+    w1 = jax.random.normal(jax.random.PRNGKey(2), (n, d_out, d_in))
+    w2 = jax.random.normal(jax.random.PRNGKey(3), (n, d_out, d_in))
+    want = (jnp.einsum("bgo,goi->bgi", z1, w1)
+            + jnp.einsum("bgo,goi->bgi", z2, w2))
+    got = dyad_mm_dgrad(z1, z2, w1, w2, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    d1, d2 = dyad_mm_dgrad_two(z1, z2, w1, w2, interpret=True)
+    np.testing.assert_allclose(np.asarray(d1 + d2), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,n,d_in,d_out", BWD_SHAPES)
+def test_wgrad_kernel_matches_einsum(B, n, d_in, d_out):
+    x1 = jax.random.normal(KEY, (B, n, d_in))
+    x2 = jax.random.normal(jax.random.PRNGKey(1), (B, n, d_in))
+    z1 = jax.random.normal(jax.random.PRNGKey(2), (B, n, d_out))
+    z2 = jax.random.normal(jax.random.PRNGKey(3), (B, n, d_out))
+    dw1, dw2 = dyad_mm_wgrad(x1, x2, z1, z2, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(dw1), np.asarray(jnp.einsum("bgi,bgo->goi", x1, z1)),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(dw2), np.asarray(jnp.einsum("bgi,bgo->goi", x2, z2)),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_wgrad_out_dtype_fp32_accumulation():
+    """bf16 inputs accumulate in fp32 and cast ONCE at the end — dw in the
+    requested out_dtype must match the fp32 reference to fp32-ish
+    tolerance, far tighter than a bf16-accumulated product chain."""
+    B, n, d_in, d_out = 64, 2, 32, 32
+    x1 = jax.random.normal(KEY, (B, n, d_in))
+    z1 = jax.random.normal(jax.random.PRNGKey(1), (B, n, d_out))
+    want = jnp.einsum("bgi,bgo->goi", x1, z1)
+    dw1, _ = dyad_mm_wgrad(x1.astype(jnp.bfloat16), x1.astype(jnp.bfloat16),
+                           z1.astype(jnp.bfloat16), z1.astype(jnp.bfloat16),
+                           out_dtype=jnp.float32, interpret=True)
+    assert dw1.dtype == jnp.float32
+    # the only error is the bf16 INPUT rounding, not accumulation ordering
+    np.testing.assert_allclose(np.asarray(dw1), np.asarray(want),
+                               rtol=5e-2, atol=1e-1)
+
+
+def _grad_pair(variant, dtype, f_in=16, f_out=24, B=6, use_kernel_bwd=True):
+    spec = dyad.DyadSpec(n_dyad=4, variant=variant)
+    p = dyad.init(KEY, f_in, f_out, spec, bias=False)
+    x = jax.random.normal(KEY, (B, f_in)).astype(dtype)
+    f_k = lambda x, w1, w2: (ops.dyad_mm(
+        x, w1, w2, variant=variant, use_kernel_bwd=use_kernel_bwd) ** 2).sum()
+    f_e = lambda x, w1, w2: (ops.dyad_mm(
+        x, w1, w2, variant=variant, use_kernel_bwd=False) ** 2).sum()
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    ge = jax.grad(f_e, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    return gk, ge
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_kernel_bwd_matches_einsum_oracle(variant, dtype, tol):
+    """use_kernel_bwd=True (default route) vs the einsum-VJP oracle."""
+    gk, ge = _grad_pair(variant, dtype)
+    for a, b in zip(gk, ge):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_pallas_bwd_matches_einsum_oracle(variant, dtype, tol, monkeypatch):
+    """REPRO_KERNEL_BWD=pallas forces the true dgrad/wgrad kernels through
+    the VJP off-TPU (interpret mode) — still oracle-exact."""
+    monkeypatch.setenv("REPRO_KERNEL_BWD", "pallas")
+    gk, ge = _grad_pair(variant, dtype)
+    for a, b in zip(gk, ge):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("variant", ["it", "ot", "dt"])
+@pytest.mark.parametrize("f_in,f_out,B", [(33, 21, 10), (35, 25, 13)])
+def test_pallas_bwd_odd_dims_exact(variant, f_in, f_out, B, monkeypatch):
+    """Odd/prime per-block dims route the bwd kernels through plan_tiles
+    zero-padding — gradients stay exact (padding contributes nothing)."""
+    monkeypatch.setenv("REPRO_KERNEL_BWD", "pallas")
+    spec = dyad.DyadSpec(n_dyad=1, variant=variant)
+    p = dyad.init(KEY, f_in, f_out, spec, bias=False)
+    x = jax.random.normal(KEY, (B, f_in))
+    f_k = lambda x, w1, w2: (ops.dyad_mm(x, w1, w2, variant=variant) ** 2).sum()
+    f_e = lambda x, w1, w2: (ops.dyad_mm(x, w1, w2, variant=variant,
+                                         use_kernel_bwd=False) ** 2).sum()
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    ge = jax.grad(f_e, argnums=(0, 1, 2))(x, p["w1"], p["w2"])
+    for a, b in zip(gk, ge):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("route", ["xla", "pallas"])
+def test_bwd_mixed_weight_dtypes(route, monkeypatch):
+    """dw* cotangents must come back in each weight's OWN dtype on every
+    route (custom_vjp enforces primal/cotangent aval agreement)."""
+    monkeypatch.setenv("REPRO_KERNEL_BWD", route)
+    x = jax.random.normal(KEY, (6, 16))
+    spec = dyad.DyadSpec(n_dyad=4)
+    p = dyad.init(KEY, 16, 24, spec, bias=False)
+    w1, w2 = p["w1"], p["w2"].astype(jnp.bfloat16)
+    g = jax.grad(lambda x, w1, w2: (ops.dyad_mm(x, w1, w2) ** 2).sum(),
+                 argnums=(1, 2))(x, w1, w2)
+    assert g[0].dtype == jnp.float32 and g[1].dtype == jnp.bfloat16
+
+
+def test_grad_through_full_dyad_ff_block():
+    """End-to-end jax.grad through a DYAD up/relu/down ff block: the
+    kernel-routed spec (fwd + fused bwd) must match the plain jnp spec."""
+    spec_k = dyad.DyadSpec(n_dyad=4, variant="it", use_kernel=True)
+    spec_j = dyad.DyadSpec(n_dyad=4, variant="it")
+    p = {"up": dyad.init(KEY, 16, 32, spec_k),
+         "down": dyad.init(jax.random.PRNGKey(1), 32, 16, spec_k)}
+    x = jax.random.normal(KEY, (8, 16))
+
+    def loss(p, x, spec):
+        h = jax.nn.relu(dyad.apply(p["up"], x, spec))
+        return (dyad.apply(p["down"], h, spec) ** 2).mean()
+
+    gk = jax.jit(jax.grad(lambda p, x: loss(p, x, spec_k)))(p, x)
+    gj = jax.jit(jax.grad(lambda p, x: loss(p, x, spec_j)))(p, x)
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gj)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

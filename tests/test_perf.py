@@ -176,6 +176,105 @@ def test_tuned_blocks_picked_up_by_kernel(cache):
                                atol=1e-4, rtol=1e-5)
 
 
+# -- autotune: backward op keys -----------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["dyad_mm_dgrad", "dyad_mm_dgrad_two",
+                                "dyad_mm_wgrad"])
+def test_autotune_bwd_op_sweep_caches_and_short_circuits(op, cache):
+    cands = [DEFAULT_BLOCKS, {"block_b": 16, "block_o": 32, "block_k": 32}]
+    blocks, us = autotune_dyad(op, 16, 2, 32, 32, candidates=cands,
+                               iters=1, warmup=0, cache=cache)
+    assert blocks in cands and us > 0
+    entry = cache.get_entry(tune_key(op, 16, 2, 32, 32))
+    assert entry is not None and entry["op"] == op
+    # cache hit short-circuits: impossible candidates prove no re-sweep
+    blocks2, _ = autotune_dyad(op, 16, 2, 32, 32, candidates=[],
+                               iters=1, cache=cache)
+    assert blocks2 == blocks
+
+
+def test_bwd_op_keys_are_distinct_from_fwd(cache):
+    """dgrad/wgrad tiles must never collide with the forward's: the same
+    shape tunes per OP."""
+    keys = {tune_key(op, 32, 4, 64, 128)
+            for op in ("dyad_mm_blocks", "dyad_mm_dgrad", "dyad_mm_wgrad")}
+    assert len(keys) == 3
+    cache.put(tune_key("dyad_mm_dgrad", 32, 4, 64, 128),
+              {"block_b": 8, "block_o": 64, "block_k": 128})
+    assert get_tuned_blocks("dyad_mm_blocks", 32, 4, 64, 128) == DEFAULT_BLOCKS
+    assert get_tuned_blocks("dyad_mm_dgrad", 32, 4, 64, 128)["block_o"] == 64
+
+
+def test_bwd_cache_corrupt_file_recovery(cache):
+    """Corrupt user cache: bwd key lookups degrade to defaults, and the
+    next put() rewrites a valid file containing the bwd entry."""
+    os.makedirs(os.path.dirname(cache.user_path), exist_ok=True)
+    with open(cache.user_path, "w") as f:
+        f.write("{broken")
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert get_tuned_blocks("dyad_mm_wgrad", 8, 2, 64, 64) == DEFAULT_BLOCKS
+    key = tune_key("dyad_mm_wgrad", 8, 2, 64, 64)
+    tuned = {"block_b": 8, "block_o": 64, "block_k": 64}
+    cache.put(key, tuned, us=3.0)
+    fresh = BlockCache(user_path=cache.user_path,
+                       defaults_path=cache.defaults_path)
+    assert fresh.get(key) == tuned
+
+
+def test_ensure_tuned_include_bwd(cache):
+    """include_bwd=True tunes the variant's dgrad op + wgrad alongside the
+    forward for every model dyad shape."""
+    from repro import configs
+    from repro.perf.autotune import ensure_tuned_for_model
+
+    lin = configs.linear_cfg("dyad_it_4_kernel")
+    cfg = configs.get("qwen3_0_6b", smoke=True, linear=lin)
+    tuned = ensure_tuned_for_model(cfg, tokens=16, iters=1, include_bwd=True)
+    ops_seen = {k.split("|")[0] for k in tuned}
+    assert ops_seen == {"dyad_mm_blocks", "dyad_mm_dgrad_two",
+                        "dyad_mm_wgrad"}
+    # every entry landed in the cache
+    for k in tuned:
+        assert cache.get(k) is not None
+
+
+def test_tuned_bwd_tiles_resolved_in_value_and_grad_trace(cache, monkeypatch):
+    """Tuned dgrad/wgrad tiles are consulted AT TRACE TIME of a jitted
+    value_and_grad over the kernel-routed op (pallas route forced so the
+    backward actually resolves tiles off-TPU)."""
+    from repro.kernels import ops as kops
+    from repro.perf import autotune as at
+
+    B, n, d_in, d_out = 16, 2, 64, 64
+    tuned = {"block_b": 8, "block_o": 32, "block_k": 32}
+    for op in ("dyad_mm_dgrad_two", "dyad_mm_wgrad"):
+        cache.put(tune_key(op, B, n, d_in, d_out), tuned, us=1.0)
+
+    seen = {}
+    real = at.get_tuned_blocks
+
+    def spy(op, *a, **kw):
+        out = real(op, *a, **kw)
+        seen[op] = dict(out)
+        return out
+
+    monkeypatch.setattr(at, "get_tuned_blocks", spy)
+    monkeypatch.setenv("REPRO_KERNEL_BWD", "pallas")
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, n * d_in))
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, d_out, d_in))
+
+    def loss(x, w1, w2):
+        return (kops.dyad_mm(x, w1, w2, variant="it") ** 2).sum()
+
+    # trace (no execution needed): tile resolution happens here
+    jax.jit(jax.value_and_grad(loss)).lower(x, w, w + 1)
+    assert seen["dyad_mm_dgrad_two"] == tuned
+    assert seen["dyad_mm_wgrad"] == tuned
+    assert "dyad_mm_blocks" in seen        # forward resolved too
+
+
 # -- compare / regression gate ------------------------------------------------
 
 

@@ -42,8 +42,8 @@ step = make_train_step(cfg, opt)
 
 ref_state, ref_m = jax.jit(step)(state, batch)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 rules = MeshRules(model="model", dp=("data",), fsdp=("data",))
 st_sh = state_shardings(mesh, jax.eval_shape(lambda: state), rules)
 b_sh = batch_shardings(mesh, jax.eval_shape(lambda: batch), rules)
@@ -65,9 +65,9 @@ def test_compressed_psum_shard_map():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim.compress import compressed_psum
+from repro.launch.mesh import compat_make_mesh, compat_shard_map
 
-mesh = jax.make_mesh((8,), ("dp",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("dp",))
 x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4) / 7.0
 
 def f(xs):
@@ -75,8 +75,8 @@ def f(xs):
 
 # check_vma=False: the all-gather+sum result is replicated by construction
 # but the varying-axes checker cannot infer that through the int8 round-trip
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P(),
-                          check_vma=False))(x)
+y = jax.jit(compat_shard_map(f, mesh=mesh, in_specs=P("dp"), out_specs=P(),
+                             check_vma=False))(x)
 expect = np.asarray(x).sum(0)
 np.testing.assert_allclose(np.asarray(y), expect, rtol=0.02, atol=0.02)
 print("compressed_psum OK")
