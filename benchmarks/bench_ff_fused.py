@@ -1,0 +1,87 @@
+"""ff megakernel suite: one-grid fused (up → act → down, hidden in VMEM)
+vs the split kernel chain vs DENSE, at OPT-125m and OPT-350m ff dims.
+
+The fused and split cells run the SAME ``ops.dyad_ff`` op with the route
+forced via ``REPRO_KERNEL_FF`` — identical math, identical tile autotuning,
+the only difference is whether the ``(tokens, d_ff)`` hidden round-trips
+through HBM between kernel dispatches.  On CPU both routes execute the
+Pallas interpreter, so the wall-clock RATIO (dispatch count + hidden
+traffic) is the deliverable, as everywhere else in this repo; the absolute
+numbers are not TPU times.  ``hidden_mb`` on each record is the HBM
+round-trip the megakernel deletes.
+
+Both routes pre-tune their tiles the same way the launchers do
+(``autotune_dyad`` per op key), so the recorded numbers are what a tuned
+run sees.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, force_ff_route, time_fn
+from repro import perf
+from repro.core import dyad, linear
+from repro.kernels import ops as kops
+from repro.perf.autotune import autotune_dyad
+
+TOKENS = 2048
+N_DYAD = 4
+ACT = "relu"                 # OPT's ff activation
+
+DIMS = {
+    "opt125m": (768, 3072),
+    "opt350m": (1024, 4096),
+}
+
+
+def _dyad_ff_params(key, d, ff):
+    spec = dyad.DyadSpec(n_dyad=N_DYAD, variant="it")
+    return {"up": dyad.init(key, d, ff, spec, bias=False),
+            "down": dyad.init(jax.random.fold_in(key, 1), ff, d, spec,
+                              bias=False)}
+
+
+def _pretune(d, ff):
+    n = N_DYAD
+    k, j = d // n, ff // n
+    autotune_dyad("dyad_ff_fused", TOKENS, n, k, k, d_mid=j, act=ACT,
+                  iters=2)
+    autotune_dyad("dyad_mm_blocks", TOKENS, n, k, j, iters=2)      # up
+    autotune_dyad("dyad_mm_blocks_two", TOKENS, n, j, k, iters=2)  # down
+
+
+def _time_route(params, x, route):
+    with force_ff_route(route):
+        f = jax.jit(lambda p, x: kops.dyad_ff(p, x, act=ACT))
+        return time_fn(f, params, x, iters=3, warmup=1)
+
+
+@perf.register("ff_fused")
+def run():
+    key = jax.random.PRNGKey(0)
+    for model_name, (d, ff) in DIMS.items():
+        x = jax.random.normal(key, (TOKENS, d))
+        shape = (TOKENS, d, ff)
+        hidden_mb = round(TOKENS * ff * 4 / 2 ** 20, 1)
+
+        pd = {"up": linear.init(key, d, ff, bias=False),
+              "down": linear.init(key, ff, d, bias=False)}
+        dense = jax.jit(lambda p, x: linear.apply(
+            p["down"], jax.nn.relu(linear.apply(p["up"], x))))
+        t_dense = time_fn(dense, pd, x, iters=3, warmup=1)
+        emit(f"ff_fused_{model_name}_dense", t_dense, shape=shape,
+             ratio=1.00)
+
+        _pretune(d, ff)
+        pv = _dyad_ff_params(key, d, ff)
+        t_split = _time_route(pv, x, "split")
+        t_fused = _time_route(pv, x, "fused")
+        emit(f"ff_fused_{model_name}_split", t_split, shape=shape,
+             hidden_mb=hidden_mb, vs_dense=round(t_dense / t_split, 3))
+        emit(f"ff_fused_{model_name}_fused", t_fused, shape=shape,
+             hidden_mb=0.0, fused_vs_split=round(t_split / t_fused, 3),
+             vs_dense=round(t_dense / t_fused, 3))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,9 +1,10 @@
 """Tiny CI suite (< 1 min on a cold GitHub runner).
 
 One dense-vs-DYAD ff cell with hlo_stats FLOP/byte counts (so the gate's
-roofline columns are exercised end-to-end), plus an autotune sweep over a
+roofline columns are exercised end-to-end), an autotune sweep over a
 deliberately small candidate space to keep the block cache and the
-``BENCH_smoke.json`` trajectory alive in CI.  This is the suite the
+``BENCH_smoke.json`` trajectory alive in CI, ff-megakernel fused-vs-split
+cells, and train-step fused-backward cells.  This is the suite the
 ``bench-smoke`` CI job runs and gates with ``python -m repro.perf.check``.
 """
 from __future__ import annotations
@@ -49,6 +50,25 @@ def run():
     blocks, us = autotune_dyad("dyad_mm_blocks", B, n, d_in, d_out,
                                iters=2, force=True)
     emit("smoke_kernel_autotune", us, shape=KERNEL_SHAPE, **blocks)
+
+    # tiny ff-megakernel cells: one-grid fused vs the split kernel chain
+    # (same op, route forced via REPRO_KERNEL_FF) so ff-fusion regressions
+    # fail the bench-smoke CI gate.  Mirrors the ff_fused suite at smoke
+    # dims.
+    from benchmarks.common import force_ff_route
+    from repro.kernels import ops as kops
+
+    pf = {"up": dyad.init(key, D, FF, spec, bias=False),
+          "down": dyad.init(key, FF, D, spec, bias=False)}
+    t_route = {}
+    for route in ("split", "fused"):
+        with force_ff_route(route):
+            f = jax.jit(lambda p, x: kops.dyad_ff(p, x, act="relu"))
+            # median of 5: these two cells gate CI, damp scheduler outliers
+            t_route[route] = time_fn(f, pf, x, iters=5)
+    emit("smoke_ff_megakernel_fused", t_route["fused"], shape=(TOKENS, D, FF),
+         fused_vs_split=round(t_route["split"] / t_route["fused"], 2))
+    emit("smoke_ff_megakernel_split", t_route["split"], shape=(TOKENS, D, FF))
 
     # tiny train-step record: fused backward vs the einsum-VJP oracle, so
     # backward regressions fail the bench-smoke CI gate.  Reuses the

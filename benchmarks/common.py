@@ -9,9 +9,34 @@ string (``k=v;k=v``) is parsed into metrics for callers not yet converted.
 """
 from __future__ import annotations
 
+import contextlib
+import os
 from typing import Optional, Sequence
 
 from repro.perf.record import time_us
+
+
+@contextlib.contextmanager
+def force_ff_route(route: str):
+    """Force the ``ops.dyad_ff`` forward route (``fused`` | ``split``) for
+    the duration of the block: sets ``REPRO_KERNEL_FF`` and clears the op's
+    trace cache on entry AND exit, so neither the forced route nor a stale
+    trace of it leaks into other cells.  The ONE route-forcing protocol
+    shared by the ff_fused and smoke suites — the two gates must never
+    drift in how they select what they time."""
+    from repro.kernels import ops as kops
+
+    prev = os.environ.get("REPRO_KERNEL_FF")
+    os.environ["REPRO_KERNEL_FF"] = route
+    kops._make_dyad_ff.cache_clear()
+    try:
+        yield
+    finally:
+        kops._make_dyad_ff.cache_clear()
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_FF", None)
+        else:
+            os.environ["REPRO_KERNEL_FF"] = prev
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -28,7 +28,9 @@ def linear_cfg(spec: str) -> factory.LinearCfg:
     "dyad_it_4_kernel" (route through the fused Pallas kernels — forward
     AND backward — with autotuned tiles; interpret-mode on CPU) |
     "dyad_it_4_kernel_einsumbwd" (kernel forward, einsum-VJP oracle
-    backward — the use_kernel_bwd=False escape hatch)."""
+    backward — the use_kernel_bwd=False escape hatch) |
+    "dyad_it_4_kernel_ffused" (whole ff module as ONE Pallas megakernel —
+    up [+ gate], in-register activation, down; hidden never leaves VMEM)."""
     if spec == "dense":
         return DENSE
     parts = spec.split("_")
@@ -39,6 +41,7 @@ def linear_cfg(spec: str) -> factory.LinearCfg:
                              cat="cat" in parts, fuse_mlp="fused" in parts,
                              use_kernel="kernel" in parts,
                              use_kernel_bwd="einsumbwd" not in parts,
+                             fuse_ff_kernel="ffused" in parts,
                              scope="ff")
 
 

@@ -44,6 +44,13 @@ class LinearCfg:
     # eliminating the interleaved-sharding reshape between projections under
     # tensor parallelism (see EXPERIMENTS §Perf).
     fuse_mlp: bool = False
+    # run that same up=IT/act/down=OT ff dataflow as ONE Pallas grid
+    # (kernels.dyad_mm.dyad_ff_fused): the (..., n, d_ff/n) hidden lives
+    # only in VMEM accumulator tiles, never in HBM.  Needs use_kernel=True;
+    # layers.mlp dispatches when the ff params are bias-free DYAD.  Spec
+    # token "ffused" (e.g. "dyad_it_4_kernel_ffused");
+    # REPRO_KERNEL_FF=fused|split forces the route inside the op.
+    fuse_ff_kernel: bool = False
 
     def dyad_at(self, site: str) -> bool:
         if self.impl != "dyad":

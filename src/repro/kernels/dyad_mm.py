@@ -1,9 +1,18 @@
-"""Fused DYAD matmul Pallas TPU kernels — forward AND backward.
+"""Fused DYAD matmul Pallas TPU kernels — forward, backward, AND the
+whole-ff megakernel.
 
 Forward: one ``pallas_call`` computes BOTH dyad components into a single
 VMEM-resident fp32 accumulator:
 
     out[b, g, o] = sum_k x1[b, g, k] * w1[g, o, k] + x2[b, g, k] * w2[g, o, k]
+
+Megakernel (:func:`dyad_ff_fused`): the transformer ff module — up (and,
+for SwiGLU, gate) DYAD matmul, activation epilogue, and the OT
+down-projection — in ONE grid.  The ``(..., n, d_ff/n)`` hidden exists only
+as an fp32 VMEM accumulator tile: it is activated in-register and consumed
+by the down dot on the same grid step, so the three-dispatch split path's
+hidden HBM round-trip (write (..., d_ff), read it back) disappears
+entirely.  See the "megakernel" section below.
 
 Backward: two more fused kernels keep the whole training hot path on Pallas
 tiles (``kernels/ops.py`` routes its custom VJP through them):
@@ -587,3 +596,277 @@ def dyad_mm_wgrad(
     if plan.padded_o != d_out or plan.padded_k != d_in:
         dw1, dw2 = dw1[:, :d_out, :d_in], dw2[:, :d_out, :d_in]
     return dw1, dw2
+
+
+# -- megakernel: the whole ff module in one grid ------------------------------
+#
+# ``dyad_ff_fused`` computes, per dyad block g:
+#
+#     pre[b,g,j] = sum_k x1[b,g,k]*wu1[g,j,k] + x2[b,g,k]*wu2[g,j,k]   (up, IT)
+#     h[b,g,j]   = act(pre)                       (SwiGLU: silu(gate_pre)*pre)
+#     z*[b,g,o]  = sum_j h[b,g,j]*wd*[g,o,j]                         (down, OT)
+#
+# Grid ``(n, B/bB, d_out/bO, d_ff_b/bJ, d_in/bK)``: j (the hidden feature
+# axis) and k (the up contraction) are sequential-innermost, everything else
+# embarrassingly parallel.  Per (g, b, o) the down accumulators (bB, bO) are
+# revisited across (j, k); per (g, b, o, j) the hidden accumulator (bB, bJ)
+# is revisited across k, activated in-register at ``k == nk-1``, and fed
+# straight into the down dot — the hidden NEVER exists in HBM.  Operand
+# streaming (x tiles, up/gate/down weight tiles) overlaps the MXU work via
+# the standard Pallas double-buffered pipeline over grid steps.
+#
+# The o axis revisits recompute the hidden once per output tile; for DYAD ff
+# dims the per-block down output d_model/n fits one tile (d_out/bO == 1), so
+# in practice the hidden is computed exactly once.
+
+# ONE activation table for kernel epilogue and oracle — keep them in sync
+from repro.kernels.ref import ACTS as _FF_ACTS  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTilePlan:
+    """Concrete 4-axis tiling for one megakernel invocation."""
+
+    bB: int
+    bO: int
+    bJ: int
+    bK: int
+    padded_b: int
+    padded_o: int
+    padded_j: int
+    padded_k: int
+
+    @property
+    def grid_steps(self) -> int:
+        return ((self.padded_b // self.bB) * (self.padded_o // self.bO)
+                * (self.padded_j // self.bJ) * (self.padded_k // self.bK))
+
+
+def plan_ff_tiles(B: int, d_out: int, d_ff: int, d_in: int,
+                  block_b: int, block_o: int, block_j: int,
+                  block_k: int) -> FFTilePlan:
+    """Tile all four megakernel axes, padding degenerate dims exactly like
+    :func:`plan_tiles`.  Zero-padding stays exact through the activation:
+    padded j columns of the DOWN weights are zero, so whatever act(0) is,
+    it contributes nothing to the output."""
+    bB, pb = _plan_axis(B, block_b, _UNIT_B)
+    bO, po = _plan_axis(d_out, block_o, _UNIT_FEAT)
+    bJ, pj = _plan_axis(d_ff, block_j, _UNIT_FEAT)
+    bK, pk = _plan_axis(d_in, block_k, _UNIT_FEAT)
+    return FFTilePlan(bB=bB, bO=bO, bJ=bJ, bK=bK, padded_b=pb, padded_o=po,
+                      padded_j=pj, padded_k=pk)
+
+
+def resolve_ff_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
+                      d_ff: int, dtype, block_b=None, block_o=None,
+                      block_k=None, block_j=None):
+    """Fill unspecified megakernel block sizes from the autotune cache
+    (explicit arguments always win).  The ff key carries the hidden width
+    (``d_mid``) on top of the usual dims — three weight tensors share one
+    VMEM budget, so tiles tuned for a different d_ff must never collide."""
+    if (block_b is None or block_o is None or block_k is None
+            or block_j is None):
+        from repro.perf.autotune import get_tuned_blocks
+
+        tuned = get_tuned_blocks(op, B, n, d_in, d_out,
+                                 str(jnp.dtype(dtype)), d_mid=d_ff)
+        block_b = tuned["block_b"] if block_b is None else block_b
+        block_o = tuned["block_o"] if block_o is None else block_o
+        block_k = tuned["block_k"] if block_k is None else block_k
+        block_j = tuned["block_j"] if block_j is None else block_j
+    return block_b, block_o, block_k, block_j
+
+
+def _ff_kernel(x1_ref, x2_ref, wu1_ref, wu2_ref, wd1_ref, wd2_ref,
+               z1_ref, z2_ref, hacc_ref, acc1_ref, acc2_ref, *,
+               nj: int, nk: int, act: str):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_down():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    @pl.when(k == 0)
+    def _init_up():
+        hacc_ref[...] = jnp.zeros_like(hacc_ref)
+
+    # up: (bB, bK) x (bJ, bK)^T -> (bB, bJ), fp32 on the MXU.
+    dn = (((1,), (1,)), ((), ()))
+    hacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wu1_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    hacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wu2_ref[0], dn, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _act_and_down():
+        # activation epilogue in-register, then the down dot consumes the
+        # hidden tile without it ever leaving VMEM.
+        h = _FF_ACTS[act](hacc_ref[...]).astype(x1_ref.dtype)
+        acc1_ref[...] += jax.lax.dot_general(
+            h, wd1_ref[0], dn, preferred_element_type=jnp.float32
+        )
+        acc2_ref[...] += jax.lax.dot_general(
+            h, wd2_ref[0], dn, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(j == nj - 1, k == nk - 1))
+    def _flush():
+        z1_ref[:, 0, :] = acc1_ref[...].astype(z1_ref.dtype)
+        z2_ref[:, 0, :] = acc2_ref[...].astype(z2_ref.dtype)
+
+
+def _ff_kernel_swiglu(x1_ref, x2_ref, wg1_ref, wg2_ref, wu1_ref, wu2_ref,
+                      wd1_ref, wd2_ref, z1_ref, z2_ref, gacc_ref, hacc_ref,
+                      acc1_ref, acc2_ref, *, nj: int, nk: int):
+    """SwiGLU body: TWO up accumulators (gate + up) share the k loop; the
+    gated product forms in-register at the k flush."""
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_down():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    @pl.when(k == 0)
+    def _init_up():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+        hacc_ref[...] = jnp.zeros_like(hacc_ref)
+
+    dn = (((1,), (1,)), ((), ()))
+    gacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wg1_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    gacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wg2_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    hacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wu1_ref[0], dn, preferred_element_type=jnp.float32
+    )
+    hacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wu2_ref[0], dn, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _act_and_down():
+        h = (jax.nn.silu(gacc_ref[...]) * hacc_ref[...]).astype(x1_ref.dtype)
+        acc1_ref[...] += jax.lax.dot_general(
+            h, wd1_ref[0], dn, preferred_element_type=jnp.float32
+        )
+        acc2_ref[...] += jax.lax.dot_general(
+            h, wd2_ref[0], dn, preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(j == nj - 1, k == nk - 1))
+    def _flush():
+        z1_ref[:, 0, :] = acc1_ref[...].astype(z1_ref.dtype)
+        z2_ref[:, 0, :] = acc2_ref[...].astype(z2_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bB", "bO", "bJ", "bK", "act", "interpret")
+)
+def _dyad_ff_impl(x1, x2, weights, *, bB: int, bO: int, bJ: int, bK: int,
+                  act: str, interpret: bool):
+    B, n, d_in = x1.shape
+    gated = act == "swiglu"
+    wd1 = weights[-2]
+    d_ffb = wd1.shape[2]
+    d_out = wd1.shape[1]
+    nj = d_ffb // bJ
+    nk = d_in // bK
+    grid = (n, B // bB, d_out // bO, nj, nk)
+
+    x_spec = pl.BlockSpec((bB, 1, bK), lambda g, b, o, j, k: (b, g, k))
+    wu_spec = pl.BlockSpec((1, bJ, bK), lambda g, b, o, j, k: (g, j, k))
+    wd_spec = pl.BlockSpec((1, bO, bJ), lambda g, b, o, j, k: (g, o, j))
+    z_spec = pl.BlockSpec((bB, 1, bO), lambda g, b, o, j, k: (b, g, o))
+    out_sds = jax.ShapeDtypeStruct((B, n, d_out), x1.dtype)
+
+    n_up = 4 if gated else 2
+    in_specs = [x_spec, x_spec] + [wu_spec] * n_up + [wd_spec, wd_spec]
+    scratch = ([pltpu.VMEM((bB, bJ), jnp.float32)] * (2 if gated else 1)
+               + [pltpu.VMEM((bB, bO), jnp.float32)] * 2)
+    body = (functools.partial(_ff_kernel_swiglu, nj=nj, nk=nk) if gated
+            else functools.partial(_ff_kernel, nj=nj, nk=nk, act=act))
+
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[z_spec, z_spec],
+        out_shape=[out_sds, out_sds],
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x1, x2, *weights)
+
+
+def dyad_ff_fused(
+    x1: jax.Array,
+    x2: jax.Array,
+    wu1: jax.Array,
+    wu2: jax.Array,
+    wd1: jax.Array,
+    wd2: jax.Array,
+    *,
+    wg1: jax.Array = None,
+    wg2: jax.Array = None,
+    act: str = "gelu",
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    block_j: int = None,
+    interpret: bool = False,
+):
+    """The whole DYAD ff module in one Pallas grid; hidden stays in VMEM.
+
+    x1, x2:   (B, n_dyad, d_in) block-contiguous / permuted input views (IT).
+    wu1, wu2: (n_dyad, d_ff_b, d_in) up weights; wg1/wg2 likewise for the
+              SwiGLU gate (required iff ``act == "swiglu"``).
+    wd1, wd2: (n_dyad, d_out, d_ff_b) down weights (OT: consumed from the
+              block layout, so both components read the SAME hidden tile).
+    Returns (z1, z2): (B, n_dyad, d_out) down-projection components — the
+    caller applies the OT output re-view + add (``ref.combine``).
+
+    Tiles default to the autotuned sizes under the ``dyad_ff_fused`` /
+    ``dyad_ff_fused_swiglu`` op key (which carries d_ff); explicit
+    ``block_*`` arguments override.
+    """
+    gated = act == "swiglu"
+    if gated != (wg1 is not None) or gated != (wg2 is not None):
+        raise ValueError("wg1/wg2 must be passed exactly when act='swiglu'")
+    if act not in _FF_ACTS and not gated:
+        raise ValueError(f"unsupported megakernel activation {act!r}")
+    B, n, d_in = x1.shape
+    _, d_ffb, _ = wu1.shape
+    _, d_out, _ = wd1.shape
+    op = "dyad_ff_fused_swiglu" if gated else "dyad_ff_fused"
+    bb, bo, bk, bj = resolve_ff_blocks(op, B, n, d_in, d_out, d_ffb,
+                                       x1.dtype, block_b, block_o, block_k,
+                                       block_j)
+    plan = plan_ff_tiles(B, d_out, d_ffb, d_in, bb, bo, bj, bk)
+    db, do = plan.padded_b - B, plan.padded_o - d_out
+    dj, dk = plan.padded_j - d_ffb, plan.padded_k - d_in
+    if db or dk:
+        x1 = jnp.pad(x1, ((0, db), (0, 0), (0, dk)))
+        x2 = jnp.pad(x2, ((0, db), (0, 0), (0, dk)))
+    ups = (wg1, wg2, wu1, wu2) if gated else (wu1, wu2)
+    if dj or dk:
+        ups = tuple(jnp.pad(w, ((0, 0), (0, dj), (0, dk))) for w in ups)
+    downs = (wd1, wd2)
+    if do or dj:
+        downs = tuple(jnp.pad(w, ((0, 0), (0, do), (0, dj))) for w in downs)
+    z1, z2 = _dyad_ff_impl(x1, x2, ups + downs, bB=plan.bB, bO=plan.bO,
+                           bJ=plan.bJ, bK=plan.bK, act=act,
+                           interpret=interpret)
+    if db or do:
+        z1, z2 = z1[:B, :, :d_out], z2[:B, :, :d_out]
+    return z1, z2

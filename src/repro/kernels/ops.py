@@ -1,6 +1,10 @@
-"""jit'd differentiable wrapper around the fused DYAD Pallas kernels.
+"""jit'd differentiable wrappers around the fused DYAD Pallas kernels.
 
-``dyad_mm(x, w1, w2, variant=...)`` is the public op:
+Two public ops: ``dyad_mm`` (one DYAD linear) and ``dyad_ff`` (the whole
+ff module — up [+ SwiGLU gate], activation, down — through the one-grid
+megakernel; see the ff section at the bottom of this file).
+
+``dyad_mm(x, w1, w2, variant=...)``:
 
 * forward — builds the two strided block views (pure re-views, folded into the
   operands' layouts by XLA) and calls the fused forward kernel;
@@ -54,16 +58,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.dyad_mm import (dyad_mm_blocks, dyad_mm_blocks_two,
-                                   dyad_mm_dgrad, dyad_mm_dgrad_two,
-                                   dyad_mm_wgrad)
+from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_mm_blocks,
+                                   dyad_mm_blocks_two, dyad_mm_dgrad,
+                                   dyad_mm_dgrad_two, dyad_mm_wgrad)
+
+
+@functools.lru_cache(maxsize=None)
+def _backend_is_tpu() -> bool:
+    """The backend never changes within a process — resolve the (relatively
+    expensive) jax backend query once instead of on every trace of every
+    call site.  Env-var escape hatches stay dynamic (plain dict lookups):
+    tests and benchmarks flip them between traces."""
+    return jax.default_backend() == "tpu"
 
 
 def _interpret() -> bool:
     """Single source of truth for the kernel execution mode — the autotuner
     and benchmarks reuse this so tuned tiles are measured the same way the
     serving and training hot paths run them."""
-    return jax.default_backend() != "tpu"
+    return not _backend_is_tpu()
 
 
 def _use_pallas_bwd() -> bool:
@@ -76,7 +89,17 @@ def _use_pallas_bwd() -> bool:
         return True
     if forced == "xla":
         return False
-    return jax.default_backend() == "tpu"
+    return _backend_is_tpu()
+
+
+def _ff_route() -> str:
+    """Which forward route does ``dyad_ff`` take?  ``fused`` (the default:
+    the one-grid megakernel) or ``split`` (up [+ gate] kernel dispatch, XLA
+    activation, down kernel dispatch — the pre-megakernel dataflow, with
+    the hidden round-tripping through HBM).  ``REPRO_KERNEL_FF=fused|split``
+    forces either; checked at trace time."""
+    forced = os.environ.get("REPRO_KERNEL_FF", "").lower()
+    return forced if forced in ("fused", "split") else "fused"
 
 
 def _bwd_direct(x2d, w1, w2, g2d, variant: str):
@@ -185,3 +208,248 @@ def dyad_mm(x, w1, w2, *, variant: str = "it", use_kernel_bwd: bool = True):
     backends where the fused backward underperforms.
     """
     return _make_dyad_mm(variant, use_kernel_bwd)(x, w1, w2)
+
+
+# -- the ff megakernel op -----------------------------------------------------
+#
+# ``dyad_ff`` is the whole transformer ff module as one differentiable op:
+# up = IT (strided view on the replicated input), activation, down = OT
+# (strided view on the reduced output) — the mixed-variant dataflow of
+# ``layers.mlp._fused_dyad_mlp``, but executed by ONE Pallas grid
+# (:func:`repro.kernels.dyad_mm.dyad_ff_fused`) so the ``(..., n, d_ff/n)``
+# hidden never exists in HBM.
+#
+# Backward: the fused VJP REMATERIALIZES the hidden (the forward deliberately
+# never stored it) with one up-kernel dispatch, then composes the existing
+# fused backward kernels: ``dyad_mm_dgrad`` for the down input cotangent (OT:
+# both dx components share the block layout — one fused accumulator),
+# ``dyad_mm_wgrad`` for both down weight grads, the activation VJP
+# elementwise in XLA, then ``dyad_mm_wgrad`` + ``dyad_mm_dgrad_two`` for the
+# up (and gate) side.  Off-TPU the same dataflow lowers to compiled XLA
+# einsums in direct layouts (:func:`_ff_bwd_direct`), exactly like
+# :func:`_bwd_direct` for the single matmul; ``REPRO_KERNEL_BWD`` applies.
+
+
+def _ff_act_fwd(act, g_pre, u_pre):
+    """(h, residuals) for the activation epilogue in BLOCK layout."""
+    if act == "swiglu":
+        return jax.vjp(lambda g, u: jax.nn.silu(g) * u, g_pre, u_pre)
+    return jax.vjp(ref.ACTS[act], u_pre)
+
+
+def _ff_forward(x, wg, wu, wd, act):
+    """Shared forward: returns flat (..., f_out).  wg is None when ungated."""
+    n, _, _ = wu[0].shape
+    d_out = wd[0].shape[1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    dt = x.dtype
+    wu1, wu2 = (w.astype(dt) for w in wu)
+    wd1, wd2 = (w.astype(dt) for w in wd)
+    x1, x2 = ref.block_views(x2d, n, "it")
+    interpret = _interpret()
+    if _ff_route() == "fused":
+        wg1, wg2 = (w.astype(dt) for w in wg) if wg is not None else (None,
+                                                                      None)
+        z1, z2 = dyad_ff_fused(x1, x2, wu1, wu2, wd1, wd2, wg1=wg1, wg2=wg2,
+                               act=act, interpret=interpret)
+    else:
+        u = dyad_mm_blocks(x1, x2, wu1, wu2, interpret=interpret)
+        if wg is not None:
+            g_pre = dyad_mm_blocks(x1, x2, wg[0].astype(dt),
+                                   wg[1].astype(dt), interpret=interpret)
+            h = jax.nn.silu(g_pre) * u
+        else:
+            h = ref.ACTS[act](u)
+        z1, z2 = dyad_mm_blocks_two(h, h, wd1, wd2, interpret=interpret)
+    y = ref.combine(z1, z2, "ot")
+    return y.reshape(*lead, n * d_out)
+
+
+def _ff_bwd_kernel(x, wg, wu, wd, g, act):
+    """Pallas-kernel backward: rematerialized hidden + fused dgrad/wgrad."""
+    n = wu[0].shape[0]
+    lead = x.shape[:-1]
+    f_in = x.shape[-1]
+    dt = x.dtype
+    x2d = x.reshape(-1, f_in)
+    g2d = g.reshape(-1, g.shape[-1]).astype(dt)
+    x1, x2 = ref.block_views(x2d, n, "it")
+    wu1, wu2 = (w.astype(dt) for w in wu)
+    wd1, wd2 = (w.astype(dt) for w in wd)
+    interpret = _interpret()
+
+    u_pre = dyad_mm_blocks(x1, x2, wu1, wu2, interpret=interpret)
+    if wg is not None:
+        g_pre = dyad_mm_blocks(x1, x2, wg[0].astype(dt), wg[1].astype(dt),
+                               interpret=interpret)
+        h, act_vjp = _ff_act_fwd(act, g_pre, u_pre)
+    else:
+        h, act_vjp = _ff_act_fwd(act, None, u_pre)
+
+    z1bar, z2bar = ref.split_cotangent(g2d, n, "ot")
+    dwd1, dwd2 = dyad_mm_wgrad(h, h, z1bar, z2bar, out_dtype=wd[0].dtype,
+                               interpret=interpret)
+    # OT down: both dh components share the block layout -> ONE fused tile.
+    dh = dyad_mm_dgrad(z1bar, z2bar, wd1, wd2, interpret=interpret)
+
+    if wg is not None:
+        dg_pre, du_pre = act_vjp(dh)
+        dg_pre = dg_pre.astype(dt)
+    else:
+        (du_pre,) = act_vjp(dh)
+    du_pre = du_pre.astype(dt)
+
+    dwu1, dwu2 = dyad_mm_wgrad(x1, x2, du_pre, du_pre,
+                               out_dtype=wu[0].dtype, interpret=interpret)
+    dx1, dx2 = dyad_mm_dgrad_two(du_pre, du_pre, wu1, wu2,
+                                 interpret=interpret)
+    dx = ref.unview(dx1, dx2, "it")
+    dgs = ()
+    if wg is not None:
+        dwg1, dwg2 = dyad_mm_wgrad(x1, x2, dg_pre, dg_pre,
+                                   out_dtype=wg[0].dtype, interpret=interpret)
+        dxg1, dxg2 = dyad_mm_dgrad_two(dg_pre, dg_pre, wg[0].astype(dt),
+                                       wg[1].astype(dt), interpret=interpret)
+        dx = dx + ref.unview(dxg1, dxg2, "it")
+        dgs = (dwg1, dwg2.astype(wg[1].dtype))
+    return (dx.reshape(*lead, f_in).astype(x.dtype), *dgs,
+            dwu1, dwu2.astype(wu[1].dtype),
+            dwd1, dwd2.astype(wd[1].dtype))
+
+
+def _ff_bwd_direct(x, wg, wu, wd, g, act):
+    """Compiled non-TPU lowering of the megakernel backward: direct-layout
+    contractions (the BLOCKTRANS operands are read through the free
+    ``(B, d, n)`` reshapes), fp32 accumulation, rematerialized hidden —
+    no strided view, hidden store, or dx un-view is ever materialized."""
+    f32 = jnp.float32
+    n, d_ffb, d_in = wu[0].shape
+    d_out = wd[0].shape[1]
+    lead = x.shape[:-1]
+    f_in = x.shape[-1]
+    dt = x.dtype
+    x2d = x.reshape(-1, f_in)
+    B = x2d.shape[0]
+    g2d = g.reshape(-1, g.shape[-1]).astype(dt)
+    x1 = x2d.reshape(B, n, d_in)
+    xr = x2d.reshape(B, d_in, n)              # x2[b,g,k] == xr[b,k,g]
+    z1 = g2d.reshape(B, n, d_out)
+    gr = g2d.reshape(B, d_out, n)             # z2bar[b,g,o] == gr[b,o,g]
+    wu1, wu2 = (w.astype(dt) for w in wu)
+    wd1, wd2 = (w.astype(dt) for w in wd)
+
+    def up(w1, w2):
+        pre = (jnp.einsum("bgk,gjk->bgj", x1, w1,
+                          preferred_element_type=f32)
+               + jnp.einsum("bkg,gjk->bgj", xr, w2,
+                            preferred_element_type=f32))
+        return pre.astype(dt)
+
+    u_pre = up(wu1, wu2)
+    if wg is not None:
+        wg1, wg2 = (w.astype(dt) for w in wg)
+        h, act_vjp = _ff_act_fwd(act, up(wg1, wg2), u_pre)
+    else:
+        h, act_vjp = _ff_act_fwd(act, None, u_pre)
+
+    dwd1 = jnp.einsum("bgj,bgo->goj", h, z1, preferred_element_type=f32)
+    dwd2 = jnp.einsum("bgj,bog->goj", h, gr, preferred_element_type=f32)
+    dh = (jnp.einsum("bgo,goj->bgj", z1, wd1, preferred_element_type=f32)
+          + jnp.einsum("bog,goj->bgj", gr, wd2,
+                       preferred_element_type=f32)).astype(dt)
+
+    if wg is not None:
+        dg_pre, du_pre = act_vjp(dh)
+    else:
+        (du_pre,) = act_vjp(dh)
+
+    def down_grads(du, w1, w2):
+        dw1 = jnp.einsum("bgk,bgj->gjk", x1, du, preferred_element_type=f32)
+        dw2 = jnp.einsum("bkg,bgj->gjk", xr, du, preferred_element_type=f32)
+        # component 2's dx is PRODUCED in the permuted layout (bkg): the
+        # un-view is a free reshape, never a copy.
+        dx = (jnp.einsum("bgj,gjk->bgk", du, w1,
+                         preferred_element_type=f32).reshape(B, f_in)
+              + jnp.einsum("bgj,gjk->bkg", du, w2,
+                           preferred_element_type=f32).reshape(B, f_in))
+        return dw1, dw2, dx
+
+    dwu1, dwu2, dx = down_grads(du_pre, wu1, wu2)
+    dgs = ()
+    if wg is not None:
+        dwg1, dwg2, dxg = down_grads(dg_pre, wg1, wg2)
+        dx = dx + dxg
+        dgs = (dwg1.astype(wg[0].dtype), dwg2.astype(wg[1].dtype))
+    return (dx.reshape(*lead, f_in).astype(x.dtype), *dgs,
+            dwu1.astype(wu[0].dtype), dwu2.astype(wu[1].dtype),
+            dwd1.astype(wd[0].dtype), dwd2.astype(wd[1].dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_dyad_ff(act: str, use_kernel_bwd: bool = True):
+    gated = act == "swiglu"
+
+    def bwd(resids, g):
+        if gated:
+            x, wg1, wg2, wu1, wu2, wd1, wd2 = resids
+            wg = (wg1, wg2)
+        else:
+            x, wu1, wu2, wd1, wd2 = resids
+            wg = None
+        if not use_kernel_bwd:
+            # pure-einsum oracle: autodiff of the reference forward.
+            args = (x, wu1, wu2, wd1, wd2) + ((wg1, wg2) if gated else ())
+            if gated:
+                f = lambda x, wu1, wu2, wd1, wd2, wg1, wg2: ref.dyad_ff_ref(
+                    x, wu1, wu2, wd1, wd2, wg1, wg2, act=act)
+            else:
+                f = lambda x, wu1, wu2, wd1, wd2: ref.dyad_ff_ref(
+                    x, wu1, wu2, wd1, wd2, act=act)
+            _, vjp = jax.vjp(f, *args)
+            grads = vjp(g)
+            if gated:
+                dx, dwu1, dwu2, dwd1, dwd2, dwg1, dwg2 = grads
+                return (dx, dwg1, dwg2, dwu1, dwu2, dwd1, dwd2)
+            return grads
+        route = _ff_bwd_kernel if _use_pallas_bwd() else _ff_bwd_direct
+        return route(x, wg, (wu1, wu2), (wd1, wd2), g, act)
+
+    if gated:
+        @jax.custom_vjp
+        def op(x, wg1, wg2, wu1, wu2, wd1, wd2):
+            return _ff_forward(x, (wg1, wg2), (wu1, wu2), (wd1, wd2), act)
+
+        def fwd(x, wg1, wg2, wu1, wu2, wd1, wd2):
+            return (op(x, wg1, wg2, wu1, wu2, wd1, wd2),
+                    (x, wg1, wg2, wu1, wu2, wd1, wd2))
+    else:
+        @jax.custom_vjp
+        def op(x, wu1, wu2, wd1, wd2):
+            return _ff_forward(x, None, (wu1, wu2), (wd1, wd2), act)
+
+        def fwd(x, wu1, wu2, wd1, wd2):
+            return op(x, wu1, wu2, wd1, wd2), (x, wu1, wu2, wd1, wd2)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def dyad_ff(params, x, *, act: str = "gelu", use_kernel_bwd: bool = True):
+    """The whole DYAD ff module as one differentiable op (bias-free).
+
+    ``params`` is the ``layers.mlp`` param dict: ``{"up", "down"}`` (+
+    ``"gate"`` for ``act="swiglu"``), each holding DYAD ``w1``/``w2``.
+    Forward runs the one-grid Pallas megakernel (``REPRO_KERNEL_FF=split``
+    falls back to the two/three-dispatch kernel chain); backward composes
+    the fused dgrad/wgrad kernels on TPU and compiled direct-layout XLA
+    elsewhere.  ``use_kernel_bwd=False`` swaps the backward to autodiff of
+    the einsum oracle (``ref.dyad_ff_ref``).
+    """
+    op = _make_dyad_ff(act, use_kernel_bwd)
+    if act == "swiglu":
+        return op(x, params["gate"]["w1"], params["gate"]["w2"],
+                  params["up"]["w1"], params["up"]["w2"],
+                  params["down"]["w1"], params["down"]["w2"])
+    return op(x, params["up"]["w1"], params["up"]["w2"],
+              params["down"]["w1"], params["down"]["w2"])

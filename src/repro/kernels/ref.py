@@ -10,6 +10,7 @@ the sum of the BLOCKDIAG and BLOCKTRANS contributions for a given variant,
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -71,6 +72,42 @@ def unview(dx1, dx2, variant: str):
     else:
         out = out + dx2.reshape(*lead, f_in)
     return out
+
+
+ACTS = {
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+}
+
+
+def dyad_ff_ref(x, wu1, wu2, wd1, wd2, wg1=None, wg2=None, *,
+                act: str = "gelu"):
+    """Pure-einsum oracle for the ff megakernel
+    (:func:`repro.kernels.dyad_mm.dyad_ff_fused` via ``ops.dyad_ff``):
+    up = IT in block layout, activation (``act='swiglu'`` gates with
+    wg1/wg2), down = OT consuming the block-layout hidden.  Shapes:
+
+        x          (..., f_in)            f_in  = n * d_in
+        wu*, wg*   (n, d_ff_b, d_in)      hidden is (..., n, d_ff_b)
+        wd*        (n, d_out, d_ff_b)     f_out = n * d_out
+        returns    (..., f_out)
+    """
+    n = wu1.shape[0]
+    x1, x2 = block_views(x, n, "it")
+
+    def up(w1, w2):
+        return (jnp.einsum("...gi,gji->...gj", x1, w1.astype(x.dtype))
+                + jnp.einsum("...gi,gji->...gj", x2, w2.astype(x.dtype)))
+
+    u = up(wu1, wu2)
+    if act == "swiglu":
+        h = jax.nn.silu(up(wg1, wg2)) * u
+    else:
+        h = ACTS[act](u)
+    z1 = jnp.einsum("...gj,goj->...go", h, wd1.astype(x.dtype))
+    z2 = jnp.einsum("...gj,goj->...go", h, wd2.astype(x.dtype))
+    return combine(z1, z2, "ot")
 
 
 def dyad_mm_bwd_ref(x, w1, w2, g, *, variant: str = "it"):

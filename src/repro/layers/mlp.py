@@ -2,20 +2,30 @@
 
 Supports SwiGLU (gate/up/down) and single-activation (GELU/ReLU) variants; all
 projections go through the linear factory with ``site="ff"``.
+
+Three DYAD execution tiers, picked per config:
+
+* plain        — each projection through ``factory.apply`` (two/three ops);
+* ``fuse_mlp`` — mixed-variant einsum fusion (up=IT, down=OT, 3-D
+  block-layout hidden) for sharded runs;
+* ``fuse_ff_kernel`` — the same dataflow as ONE Pallas megakernel
+  (``kernels.ops.dyad_ff``): activation epilogue in-register, hidden never
+  leaves VMEM.  Requires ``use_kernel`` and bias-free ff params.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import dyad as dyad_lib
 from repro.core import factory
+from repro.kernels import ops as kops
+from repro.kernels.ref import ACTS as _ACTS
 from repro.sharding import ctx as shard_ctx
 
-_ACTS = {
-    "gelu": jax.nn.gelu,
-    "relu": jax.nn.relu,
-    "silu": jax.nn.silu,
-}
+# activations the ff megakernel can run as an in-register epilogue
+# (_ACTS is the shared kernel-epilogue/oracle table in kernels.ref)
+_FF_KERNEL_ACTS = frozenset({"swiglu", *_ACTS})
 
 
 def init_mlp(key, d_model: int, d_ff: int, lin_cfg: factory.LinearCfg, *,
@@ -38,13 +48,30 @@ def init_mlp(key, d_model: int, d_ff: int, lin_cfg: factory.LinearCfg, *,
     }
 
 
+def _ff_kernel_ready(params, lin_cfg: factory.LinearCfg, act: str) -> bool:
+    """Route this ff module through the one-grid Pallas megakernel?  Needs
+    the config opt-in, a supported epilogue activation, bias-free DYAD
+    params on every projection (the kernel has no bias epilogue; the
+    default transformer ff is bias-free), and NO active tensor-parallel
+    sharding context — the megakernel is a single-device dataflow, and a
+    TP hidden needs the ``fuse_mlp`` path's block-layout sharding
+    constraint (skipping it silently costs an all-gather per layer)."""
+    if not (lin_cfg.fuse_ff_kernel and lin_cfg.use_kernel):
+        return False
+    if act not in _FF_KERNEL_ACTS:
+        return False
+    if shard_ctx.current() is not None:
+        return False
+    need = ("gate", "up", "down") if act == "swiglu" else ("up", "down")
+    return all("w1" in params.get(k, {}) and "b" not in params[k]
+               for k in need)
+
+
 def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
     """Mixed-variant fused ff: up=IT (strided view on the replicated input),
     down=OT (strided view on the reduced output) — the hidden stays in the
     DYAD block layout (..., n, d_out) end-to-end, so its TP sharding on
     d_out never hits an inexpressible flat reshape (no all-gather)."""
-    from repro.core import dyad as dyad_lib
-
     n = params["up"]["w1"].shape[0]
     spec = dyad_lib.DyadSpec(n_dyad=n, variant="it")
     if act == "swiglu":
@@ -58,6 +85,12 @@ def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
 
 
 def apply_mlp(params, x, lin_cfg: factory.LinearCfg, *, act: str = "swiglu"):
+    if _ff_kernel_ready(params, lin_cfg, act):
+        # whole ff module in one Pallas grid; hidden never leaves VMEM.
+        # Single-device dataflow — under tensor parallelism use fuse_mlp,
+        # whose block-layout hidden carries the sharding constraint.
+        return kops.dyad_ff(params, x, act=act,
+                            use_kernel_bwd=lin_cfg.use_kernel_bwd)
     if lin_cfg.fuse_mlp and "w1" in params.get("down", {}):
         return _fused_dyad_mlp(params, x, lin_cfg, act)
     if act == "swiglu":

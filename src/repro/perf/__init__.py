@@ -13,7 +13,8 @@ Three cooperating parts (see docs/ARCHITECTURE.md §Performance subsystem):
   run against the last committed ``BENCH_*.json`` and fail on regression.
 """
 from repro.perf.autotune import (autotune_dyad, candidate_blocks,
-                                 get_tuned_blocks, tune_key)
+                                 candidate_blocks_ff, get_tuned_blocks,
+                                 memo_counts, tune_key, vmem_estimate_ff)
 from repro.perf.record import (BenchResult, Recorder, current_recorder,
                                hlo_metrics, recording)
 from repro.perf.registry import available_suites, register, run_suite
@@ -21,5 +22,6 @@ from repro.perf.registry import available_suites, register, run_suite
 __all__ = [
     "BenchResult", "Recorder", "current_recorder", "recording", "hlo_metrics",
     "register", "run_suite", "available_suites",
-    "autotune_dyad", "candidate_blocks", "get_tuned_blocks", "tune_key",
+    "autotune_dyad", "candidate_blocks", "candidate_blocks_ff",
+    "get_tuned_blocks", "memo_counts", "tune_key", "vmem_estimate_ff",
 ]

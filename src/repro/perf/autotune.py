@@ -36,6 +36,14 @@ Blocks = Dict[str, int]
 
 DEFAULT_BLOCKS: Blocks = {"block_b": 256, "block_o": 256, "block_k": 512}
 
+# the ff megakernel tiles a 4th axis: block_j tiles the hidden (d_ff/n)
+# feature dim that never leaves VMEM.
+DEFAULT_FF_BLOCKS: Blocks = {"block_b": 256, "block_o": 256,
+                             "block_k": 512, "block_j": 512}
+
+# op keys that resolve 4-axis ff tiles (and carry d_mid in their cache key)
+FF_OPS = ("dyad_ff_fused", "dyad_ff_fused_swiglu")
+
 # VMEM is ~16 MB/core on TPU v4/v5; leave headroom for double-buffered
 # pipelines (factor 2 on streamed operands) and the fp32 accumulator(s).
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
@@ -49,10 +57,15 @@ def _next_pow2(x: int) -> int:
 
 
 def tune_key(op: str, B: int, n: int, d_in: int, d_out: int,
-             dtype: str = "float32", backend: Optional[str] = None) -> str:
-    """Canonical cache key; B is bucketed to the next power of two."""
+             dtype: str = "float32", backend: Optional[str] = None,
+             d_mid: Optional[int] = None) -> str:
+    """Canonical cache key; B is bucketed to the next power of two.
+    ``d_mid`` (the ff megakernel's hidden width d_ff/n) extends the key for
+    ops whose tiling couples three weight tensors — omitted (and absent
+    from the key) for the single-matmul ops."""
     backend = backend or _backend()
-    return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}"
+    mid = f"|j{d_mid}" if d_mid is not None else ""
+    return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}{mid}"
             f"|{dtype}|{backend}")
 
 
@@ -105,8 +118,11 @@ class BlockCache:
                 b = entry["blocks"]
                 if all(isinstance(b.get(f), int) and b[f] > 0
                        for f in ("block_b", "block_o", "block_k")):
-                    return {f: b[f] for f in
-                            ("block_b", "block_o", "block_k")}
+                    out = {f: b[f] for f in
+                           ("block_b", "block_o", "block_k")}
+                    if isinstance(b.get("block_j"), int) and b["block_j"] > 0:
+                        out["block_j"] = b["block_j"]
+                    return out
         return None
 
     def get_entry(self, key: str) -> Optional[dict]:
@@ -123,13 +139,32 @@ class BlockCache:
             json.dump(self.user, f, indent=1, sort_keys=True)
             f.write("\n")
         os.replace(tmp, self.user_path)
+        _memo_clear()          # new tiles must be visible to the next trace
 
     def invalidate(self) -> None:
         self._user = None
         self._defaults = None
+        _memo_clear()
 
 
 _CACHE: Optional[BlockCache] = None
+
+# trace-time memo over get_tuned_blocks: a jitted model trace resolves tiles
+# once per DYAD call site, and a 48-layer model traces hundreds of sites —
+# without this each one re-walks the (possibly file-backed) JSON cache.
+# Invalidated by put()/invalidate()/reset_cache().
+_MEMO: Dict[str, Blocks] = {}
+_MEMO_COUNTS = {"hits": 0, "misses": 0}
+
+
+def _memo_clear() -> None:
+    _MEMO.clear()
+
+
+def memo_counts() -> Dict[str, int]:
+    """Copy of the get_tuned_blocks memo hit/miss counters (observability +
+    tests; counters survive _memo_clear so rates stay meaningful)."""
+    return dict(_MEMO_COUNTS)
 
 
 def get_cache() -> BlockCache:
@@ -143,15 +178,33 @@ def reset_cache(cache: Optional[BlockCache] = None) -> None:
     """Swap / drop the process-wide cache (tests, env-var changes)."""
     global _CACHE
     _CACHE = cache
+    _memo_clear()
 
 
 def get_tuned_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
                      dtype: str = "float32",
-                     backend: Optional[str] = None) -> Blocks:
-    """Tuned ``(block_b, block_o, block_k)`` for this key, else the
-    hardcoded defaults.  Called by the kernel wrappers at trace time."""
-    found = get_cache().get(tune_key(op, B, n, d_in, d_out, dtype, backend))
-    return found if found is not None else dict(DEFAULT_BLOCKS)
+                     backend: Optional[str] = None,
+                     d_mid: Optional[int] = None) -> Blocks:
+    """Tuned blocks for this key, else the hardcoded defaults (the 4-axis
+    ff defaults for the megakernel ops, which also pass ``d_mid``).  Called
+    by the kernel wrappers at trace time; memoized in-process so repeated
+    jit traces don't re-consult the JSON-backed cache per call site."""
+    key = tune_key(op, B, n, d_in, d_out, dtype, backend, d_mid=d_mid)
+    hit = _MEMO.get(key)
+    if hit is not None:
+        _MEMO_COUNTS["hits"] += 1
+        return dict(hit)
+    _MEMO_COUNTS["misses"] += 1
+    default = DEFAULT_FF_BLOCKS if op in FF_OPS else DEFAULT_BLOCKS
+    found = get_cache().get(key)
+    if found is None:
+        out = dict(default)
+    else:
+        # tuned entries may predate a new tile axis: fill from the default
+        # (and drop axes this op does not tile)
+        out = {f: found.get(f, default[f]) for f in default}
+    _MEMO[key] = dict(out)
+    return out
 
 
 # -- candidate generation -----------------------------------------------------
@@ -178,6 +231,55 @@ def vmem_estimate(bb: int, bo: int, bk: int, dtype: str,
         stream = 2 * (2 * bb * bk + 2 * bo * bk + n_acc * bb * bo) * ib
         acc = 4 * n_acc * bb * bo
     return stream + acc
+
+
+def vmem_estimate_ff(bb: int, bo: int, bk: int, bj: int, dtype: str,
+                     gated: bool = False) -> int:
+    """Double-buffered VMEM footprint of one ff-megakernel grid step.
+
+    Streams: two (bb, bk) input tiles, the up (and, gated, gate) weight
+    tiles (bj, bk), two down weight tiles (bo, bj), two (bb, bo) output
+    tiles.  Resident fp32 accumulators: the (bb, bj) hidden tile (two when
+    gated) plus the two (bb, bo) down tiles — three weight tensors and the
+    in-VMEM hidden now share ONE budget, which is exactly why the ff ops
+    tune separately from the single-matmul kernels."""
+    ib = _dtype_bytes(dtype)
+    n_up = 4 if gated else 2
+    stream = 2 * (2 * bb * bk + n_up * bj * bk + 2 * bo * bj
+                  + 2 * bb * bo) * ib
+    acc = 4 * ((2 if gated else 1) * bb * bj + 2 * bb * bo)
+    return stream + acc
+
+
+def candidate_blocks_ff(B: int, n: int, d_in: int, d_out: int, d_ff: int,
+                        dtype: str = "float32", gated: bool = False,
+                        max_candidates: int = 32) -> List[Blocks]:
+    """Power-of-two 4-axis sweep for the ff megakernel, largest tiles first
+    (fewer grid steps), filtered by :func:`vmem_estimate_ff`."""
+    bbs = [b for b in (512, 256, 128, 64) if b <= max(_next_pow2(B), 64)]
+    bos = [b for b in (512, 256, 128) if b <= max(_next_pow2(d_out), 128)]
+    bks = [b for b in (512, 256, 128) if b <= max(_next_pow2(d_in), 128)]
+    bjs = [b for b in (1024, 512, 256, 128)
+           if b <= max(_next_pow2(d_ff), 128)]
+    out: List[Blocks] = []
+    seen = set()
+    for cand in ([DEFAULT_FF_BLOCKS]
+                 + [{"block_b": bb, "block_o": bo, "block_k": bk,
+                     "block_j": bj}
+                    for bj in bjs for bb in bbs for bo in bos for bk in bks]):
+        sig = (cand["block_b"], cand["block_o"], cand["block_k"],
+               cand["block_j"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        if vmem_estimate_ff(cand["block_b"], cand["block_o"],
+                            cand["block_k"], cand["block_j"], dtype,
+                            gated=gated) > VMEM_BUDGET_BYTES:
+            continue
+        out.append(dict(cand))
+        if len(out) >= max_candidates:
+            break
+    return out
 
 
 def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
@@ -215,24 +317,30 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
                   candidates: Optional[Iterable[Blocks]] = None,
                   iters: int = 3, warmup: int = 1,
                   cache: Optional[BlockCache] = None,
-                  force: bool = False) -> Tuple[Blocks, float]:
+                  force: bool = False,
+                  d_mid: Optional[int] = None,
+                  act: str = "gelu") -> Tuple[Blocks, float]:
     """Sweep block sizes for one kernel shape; persist and return the winner.
 
     ``op`` is one of ``"dyad_mm_blocks"`` / ``"dyad_mm_blocks_two"`` (the
     forward kernels), ``"dyad_mm_dgrad"`` / ``"dyad_mm_dgrad_two"`` /
     ``"dyad_mm_wgrad"`` (the backward kernels — dgrad contracts d_out and
     produces d_in, so its ``block_o`` tiles d_in and ``block_k`` tiles
-    d_out; wgrad contracts the batch axis), or ``"dense_bmm"`` (the
-    baseline).  ``(B, n, d_in, d_out)`` always names the LAYER-natural
-    dims, the same key the trace-time lookup uses.  Returns
-    ``(blocks, best_us)``.  A cache hit short-circuits the sweep unless
-    ``force=True``.
+    d_out; wgrad contracts the batch axis), ``"dyad_ff_fused"`` /
+    ``"dyad_ff_fused_swiglu"`` (the whole-ff megakernel — pass the hidden
+    width d_ff/n as ``d_mid``; ``act`` picks the timed epilogue), or
+    ``"dense_bmm"`` (the baseline).  ``(B, n, d_in, d_out)`` always names
+    the LAYER-natural dims, the same key the trace-time lookup uses.
+    Returns ``(blocks, best_us)``.  A cache hit short-circuits the sweep
+    unless ``force=True``.
     """
     import jax
     import jax.numpy as jnp
 
     cache = cache or get_cache()
-    key = tune_key(op, B, n, d_in, d_out, dtype)
+    if op in FF_OPS and d_mid is None:
+        raise ValueError(f"{op} needs d_mid (the hidden width d_ff/n)")
+    key = tune_key(op, B, n, d_in, d_out, dtype, d_mid=d_mid)
     if not force:
         hit = cache.get(key)
         if hit is not None:
@@ -262,6 +370,44 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     n_acc = 1 if op in ("dyad_mm_blocks", "dyad_mm_dgrad") else 2
     interpret = _interpret()
 
+    if op in FF_OPS:
+        gated = op.endswith("swiglu")
+        kact = "swiglu" if gated else act
+        wu1 = jax.random.normal(jax.random.fold_in(kx, 4), (n, d_mid, d_in),
+                                kd)
+        wu2 = jax.random.normal(jax.random.fold_in(kx, 5), (n, d_mid, d_in),
+                                kd)
+        wd1 = jax.random.normal(jax.random.fold_in(kx, 6), (n, d_out, d_mid),
+                                kd)
+        wd2 = jax.random.normal(jax.random.fold_in(kx, 7), (n, d_out, d_mid),
+                                kd)
+        gates = {}
+        if gated:
+            gates = {"wg1": jax.random.normal(jax.random.fold_in(kx, 8),
+                                              (n, d_mid, d_in), kd),
+                     "wg2": jax.random.normal(jax.random.fold_in(kx, 9),
+                                              (n, d_mid, d_in), kd)}
+        kernel = lambda **c: dyad_mm.dyad_ff_fused(
+            x1, x2, wu1, wu2, wd1, wd2, act=kact, interpret=interpret,
+            **gates, **c)
+        cands = (list(candidates) if candidates is not None
+                 else candidate_blocks_ff(B, n, d_in, d_out, d_mid, dtype,
+                                          gated=gated))
+        seen_plans = set()
+        deduped = []
+        for cand in cands:
+            plan = dyad_mm.plan_ff_tiles(B, d_out, d_mid, d_in,
+                                         cand["block_b"], cand["block_o"],
+                                         cand["block_j"], cand["block_k"])
+            if plan in seen_plans:
+                continue
+            seen_plans.add(plan)
+            deduped.append(cand)
+        best, best_us = _time_candidates(kernel, deduped, key, iters, warmup)
+        cache.put(key, best, us=round(best_us, 2), op=op,
+                  candidates=len(deduped))
+        return best, best_us
+
     if op in ("dyad_mm_dgrad", "dyad_mm_dgrad_two"):
         # dgrad consumes per-component cotangents (B, n, d_out)
         z1 = jax.random.normal(jax.random.fold_in(kx, 4), (B, n, d_out), kd)
@@ -287,8 +433,6 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         plan_dims = (B, d_out, d_in)
         cand_dims = (d_in, d_out)
 
-    best: Optional[Blocks] = None
-    best_us = float("inf")
     cands = list(candidates) if candidates is not None else candidate_blocks(
         B, n, cand_dims[0], cand_dims[1], dtype, n_acc=n_acc,
         wgrad=(op == "dyad_mm_wgrad"))
@@ -304,6 +448,16 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         seen_plans.add(plan)
         deduped.append(cand)
     cands = deduped
+    best, best_us = _time_candidates(kernel, cands, key, iters, warmup)
+    cache.put(key, best, us=round(best_us, 2), op=op,
+              candidates=len(cands))
+    return best, best_us
+
+
+def _time_candidates(kernel, cands: List[Blocks], key: str, iters: int,
+                     warmup: int) -> Tuple[Blocks, float]:
+    best: Optional[Blocks] = None
+    best_us = float("inf")
     for cand in cands:
         try:
             us = _time_us(lambda c=cand: kernel(**c),
@@ -316,8 +470,6 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
             best, best_us = cand, us
     if best is None:
         raise RuntimeError(f"autotune: every candidate failed for {key}")
-    cache.put(key, best, us=round(best_us, 2), op=op,
-              candidates=len(cands))
     return best, best_us
 
 
@@ -345,6 +497,32 @@ def model_dyad_shapes(cfg) -> List[Tuple[int, int, int]]:
         n = dyad.resolve_n_dyad(f_in, f_out, lin.n_dyad)
         shapes.add((n, f_in // n, f_out // n))
     return sorted(shapes)
+
+
+def model_ff_fused_shape(cfg) -> Optional[Tuple[int, int, int]]:
+    """``(n_dyad, d_in_per_block, d_ff_per_block)`` when the config routes
+    its ff modules through the megakernel (``fuse_ff_kernel``), else None.
+    The down output width per block equals d_in_per_block (ff maps
+    d_model -> d_ff -> d_model).  Mirrors ``layers.mlp._ff_kernel_ready``:
+    biased ff modules (``mlp_bias=True``, e.g. OPT) and unsupported
+    epilogue activations fall back to the per-projection kernels, so
+    sweeping megakernel tiles for them would burn minutes tuning an op
+    that is never dispatched (and every candidate would fail for an
+    unknown act)."""
+    lin = getattr(cfg, "linear", None)
+    if (lin is None or not getattr(lin, "fuse_ff_kernel", False)
+            or not getattr(lin, "use_kernel", False)
+            or not lin.dyad_at("ff")
+            or getattr(cfg, "mlp_bias", False)):
+        return None
+    from repro.kernels.ref import ACTS
+
+    if getattr(cfg, "act", "gelu") not in set(ACTS) | {"swiglu"}:
+        return None
+    from repro.core import dyad
+
+    n = dyad.resolve_n_dyad(cfg.d_model, cfg.d_ff, lin.n_dyad)
+    return (n, cfg.d_model // n, cfg.d_ff // n)
 
 
 def bwd_ops_for_variant(variant: str) -> List[str]:
@@ -380,4 +558,19 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
             blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dtype,
                                       iters=iters)
             tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
+    ff = model_ff_fused_shape(cfg)
+    if ff is not None:
+        n, k, j = ff
+        mact = getattr(cfg, "act", "gelu")
+        op = "dyad_ff_fused_swiglu" if mact == "swiglu" else "dyad_ff_fused"
+        blocks, _ = autotune_dyad(op, tokens, n, k, k, dtype, d_mid=j,
+                                  act=mact, iters=iters)
+        tuned[tune_key(op, tokens, n, k, k, dtype, d_mid=j)] = blocks
+        if include_bwd:
+            # the megakernel VJP composes the existing bwd kernels; the
+            # main loop above already tunes them at both ff shapes except
+            # the OT-fused down dgrad (d_in = d_ff/n, d_out = d_model/n)
+            blocks, _ = autotune_dyad("dyad_mm_dgrad", tokens, n, j, k,
+                                      dtype, iters=iters)
+            tuned[tune_key("dyad_mm_dgrad", tokens, n, j, k, dtype)] = blocks
     return tuned

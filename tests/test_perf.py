@@ -275,6 +275,149 @@ def test_tuned_bwd_tiles_resolved_in_value_and_grad_trace(cache, monkeypatch):
     assert "dyad_mm_blocks" in seen        # forward resolved too
 
 
+# -- autotune: trace-time memo ------------------------------------------------
+
+
+def test_get_tuned_blocks_memoized(cache):
+    """Repeated trace-time lookups hit the in-process memo instead of
+    re-walking the JSON-backed cache layers."""
+    before = autotune.memo_counts()
+    blocks = get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64)
+    mid = autotune.memo_counts()
+    assert mid["misses"] == before["misses"] + 1
+    for _ in range(5):
+        assert get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64) == blocks
+    after = autotune.memo_counts()
+    assert after["hits"] >= mid["hits"] + 5
+    assert after["misses"] == mid["misses"]
+    # the memo hands out copies: mutating a result must not poison it
+    got = get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64)
+    got["block_b"] = -1
+    assert get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64)["block_b"] > 0
+
+
+def test_get_tuned_blocks_memo_invalidated_by_put(cache):
+    """put() must invalidate the memo — freshly tuned tiles have to reach
+    the very next trace."""
+    key = tune_key("dyad_mm_blocks", 8, 2, 64, 64)
+    assert get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64) == DEFAULT_BLOCKS
+    tuned = {"block_b": 8, "block_o": 64, "block_k": 64}
+    cache.put(key, tuned, us=1.0)
+    assert get_tuned_blocks("dyad_mm_blocks", 8, 2, 64, 64) == tuned
+
+
+# -- autotune: ff megakernel op keys ------------------------------------------
+
+
+def test_tune_key_carries_d_mid(cache):
+    k_ff = tune_key("dyad_ff_fused", 32, 4, 192, 192, d_mid=768)
+    assert "|j768|" in k_ff
+    assert k_ff != tune_key("dyad_ff_fused", 32, 4, 192, 192, d_mid=384)
+    # single-matmul keys are unchanged by the new field
+    assert "|j" not in tune_key("dyad_mm_blocks", 32, 4, 192, 192)
+
+
+def test_ff_defaults_and_block_j_round_trip(cache):
+    ff = get_tuned_blocks("dyad_ff_fused", 8, 2, 64, 64, d_mid=128)
+    assert ff == autotune.DEFAULT_FF_BLOCKS and "block_j" in ff
+    key = tune_key("dyad_ff_fused", 8, 2, 64, 64, d_mid=128)
+    tuned = {"block_b": 8, "block_o": 64, "block_k": 64, "block_j": 128}
+    cache.put(key, tuned, us=1.0)
+    assert get_tuned_blocks("dyad_ff_fused", 8, 2, 64, 64,
+                            d_mid=128) == tuned
+    # an entry written before the j axis existed degrades to the default j
+    cache.put(key, {"block_b": 8, "block_o": 64, "block_k": 64}, us=1.0)
+    got = get_tuned_blocks("dyad_ff_fused", 8, 2, 64, 64, d_mid=128)
+    assert got["block_j"] == autotune.DEFAULT_FF_BLOCKS["block_j"]
+    assert got["block_b"] == 8
+
+
+def test_candidate_blocks_ff_respect_vmem_budget():
+    for gated in (False, True):
+        cands = autotune.candidate_blocks_ff(4096, 4, 1024, 1024, 4096,
+                                             gated=gated)
+        assert cands
+        for c in cands:
+            assert autotune.vmem_estimate_ff(
+                c["block_b"], c["block_o"], c["block_k"], c["block_j"],
+                "float32", gated=gated) <= autotune.VMEM_BUDGET_BYTES
+    # the gate's extra weight stream + second hidden accumulator must COST:
+    # same tiles estimate strictly higher when gated
+    assert (autotune.vmem_estimate_ff(256, 256, 512, 512, "float32", True)
+            > autotune.vmem_estimate_ff(256, 256, 512, 512, "float32",
+                                        False))
+
+
+@pytest.mark.parametrize("op", ["dyad_ff_fused", "dyad_ff_fused_swiglu"])
+def test_autotune_ff_sweep_caches_and_short_circuits(op, cache):
+    cands = [dict(autotune.DEFAULT_FF_BLOCKS),
+             {"block_b": 16, "block_o": 32, "block_k": 32, "block_j": 16}]
+    blocks, us = autotune_dyad(op, 16, 2, 32, 32, candidates=cands,
+                               iters=1, warmup=0, cache=cache, d_mid=48)
+    assert blocks in cands and us > 0
+    entry = cache.get_entry(tune_key(op, 16, 2, 32, 32, d_mid=48))
+    assert entry is not None and entry["op"] == op
+    blocks2, _ = autotune_dyad(op, 16, 2, 32, 32, candidates=[],
+                               iters=1, cache=cache, d_mid=48)
+    assert blocks2 == blocks
+
+
+def test_autotune_ff_requires_d_mid(cache):
+    with pytest.raises(ValueError, match="d_mid"):
+        autotune_dyad("dyad_ff_fused", 16, 2, 32, 32, cache=cache)
+
+
+def test_ensure_tuned_covers_ff_megakernel(cache):
+    """A fuse_ff_kernel config tunes the ff op (+ the down dgrad the
+    megakernel VJP composes) alongside the per-matmul ops."""
+    from repro import configs
+    from repro.perf.autotune import ensure_tuned_for_model
+
+    lin = configs.linear_cfg("dyad_it_4_kernel_ffused")
+    cfg = configs.get("opt125m", smoke=True, linear=lin, mlp_bias=False)
+    tuned = ensure_tuned_for_model(cfg, tokens=16, iters=1, include_bwd=True)
+    ops_seen = {k.split("|")[0] for k in tuned}
+    assert "dyad_ff_fused" in ops_seen            # opt125m act == relu
+    assert "dyad_mm_dgrad" in ops_seen            # OT down dgrad
+    for k in tuned:
+        assert cache.get(k) is not None
+    # a BIASED ff never dispatches the megakernel (mlp._ff_kernel_ready),
+    # so the sweep must skip it too — no minutes burned on an unused op
+    cfg_b = configs.get("opt125m", smoke=True, linear=lin)   # mlp_bias=True
+    tuned_b = ensure_tuned_for_model(cfg_b, tokens=16, iters=1)
+    assert not any(k.startswith("dyad_ff_fused") for k in tuned_b)
+    # without the flag the ff op is not tuned either
+    cfg2 = configs.get("opt125m", smoke=True,
+                       linear=configs.linear_cfg("dyad_it_4_kernel"))
+    tuned2 = ensure_tuned_for_model(cfg2, tokens=16, iters=1)
+    assert not any(k.startswith("dyad_ff_fused") for k in tuned2)
+
+
+def test_tuned_ff_tiles_resolved_in_trace(cache, monkeypatch):
+    """The megakernel resolves its 4-axis tiles from the cache at trace
+    time of a jitted fuse_ff_kernel mlp forward."""
+    import jax
+    from repro.core import factory
+    from repro.layers import mlp as mlp_lib
+    from repro.perf import autotune as at
+
+    seen = {}
+    real = at.get_tuned_blocks
+
+    def spy(op, *a, **kw):
+        out = real(op, *a, **kw)
+        seen[op] = dict(out)
+        return out
+
+    monkeypatch.setattr(at, "get_tuned_blocks", spy)
+    lc = factory.LinearCfg(impl="dyad", n_dyad=2, variant="it",
+                           use_kernel=True, fuse_ff_kernel=True)
+    p = mlp_lib.init_mlp(jax.random.PRNGKey(0), 32, 64, lc, act="gelu")
+    x = jax.jit(lambda p, x: mlp_lib.apply_mlp(p, x, lc, act="gelu")).lower(
+        p, jax.ShapeDtypeStruct((8, 32), jnp.float32))
+    assert "block_j" in seen["dyad_ff_fused"]
+
+
 # -- compare / regression gate ------------------------------------------------
 
 
