@@ -1,0 +1,145 @@
+"""Attention suite: flash kernels vs the XLA sdpa paths, plus decode-step
+latency for both serve engines.
+
+Prefill cells compare the Pallas flash kernel (:mod:`repro.kernels.
+flash_attn`, tiles pre-tuned through ``autotune_dyad`` exactly like the
+launchers do) against the einsum paths it subsumes — ``_naive_sdpa``
+(materializes the (S, T) scores), ``_chunked_sdpa`` (online-softmax key
+chunks, re-reads q per chunk), and at 32k the ``_q_block_sdpa`` scan (the
+non-Pallas fallback dispatched there) — at OPT-125m/350m attention dims.
+On CPU the kernel executes the compiled interpret path, so as everywhere
+in this repo the wall-clock RATIO is the deliverable, not a TPU time.
+The 32k cells run a 2-KV-head slice (``heads`` metric) to keep the suite
+minutes, not hours; the full-head chunked path at 32k is the quadratic
+blow-up this kernel exists to delete and is not timed.
+
+Decode cells record one decode-step latency for the homogeneous
+``Engine`` (jitted scan step) and the per-slot ``ContinuousBatchingEngine``
+(padded batch step incl. slot bookkeeping) on the qwen3 smoke config,
+flash route vs the einsum route (``REPRO_KERNEL_ATTN`` forced, same
+protocol as the ff suites).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, force_attn_route, time_fn
+from repro import perf
+from repro.kernels import flash_attn as fa
+from repro.layers import attention as attn_lib
+from repro.perf.autotune import autotune_dyad
+
+# (n_heads, head_dim) at the paper's experimental dims; n_kv == n_heads
+DIMS = {
+    "opt125m": (12, 64),
+    "opt350m": (16, 64),
+}
+S_SHORT = 4096
+S_LONG = 32768
+LONG_HEADS = 2          # 32k cells run a KV-head slice (CPU-feasible)
+CHUNK = 2048            # the serving configs' attn_chunk scale
+
+# the plausible large-tile candidates at these dims; the sweep still runs
+# through autotune_dyad so the winner lands in the block cache the same
+# way the launchers' --autotune does
+CANDS = [{"block_b": 1024, "block_o": 128, "block_k": 1024},
+         {"block_b": 512, "block_o": 128, "block_k": 1024}]
+
+
+def _qkv(key, S, K, h):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, S, K, 1, h))
+    k = jax.random.normal(ks[1], (1, S, K, h))
+    v = jax.random.normal(ks[2], (1, S, K, h))
+    return q, k, v
+
+
+def _flash_fn(S, **kw):
+    return jax.jit(lambda q, k, v: fa.flash_prefill(
+        q, k, v, causal=True, interpret=True, **kw)[0])
+
+
+def _prefill_cells(key):
+    for model_name, (K, h) in DIMS.items():
+        S = S_SHORT
+        q, k, v = _qkv(jax.random.fold_in(key, K), S, K, h)
+        qpos = jnp.arange(S)
+        shape = (1, S, K, h)
+
+        naive = jax.jit(lambda q, k, v: attn_lib._naive_sdpa(
+            q, k, v, qpos, qpos, True, None))
+        t_n = time_fn(naive, q, k, v, iters=2, warmup=1)
+        emit(f"attn_{model_name}_s4k_naive", t_n, shape=shape, ratio=1.0)
+
+        chunked = jax.jit(lambda q, k, v: attn_lib._chunked_sdpa(
+            q, k, v, qpos, qpos, True, None, CHUNK))
+        t_c = time_fn(chunked, q, k, v, iters=2, warmup=1)
+        emit(f"attn_{model_name}_s4k_chunked", t_c, shape=shape,
+             vs_naive=round(t_n / t_c, 2))
+
+        blocks, _ = autotune_dyad("flash_prefill", S, K, h, S, d_mid=1,
+                                  candidates=CANDS, iters=1, warmup=1)
+        t_f = time_fn(_flash_fn(S), q, k, v, iters=2, warmup=1)
+        emit(f"attn_{model_name}_s4k_flash", t_f, shape=shape,
+             flash_vs_chunked=round(t_c / t_f, 2),
+             flash_vs_naive=round(t_n / t_f, 2), **blocks)
+
+    # 32k: the q-block scan is the XLA fallback actually dispatched there
+    # (the plain chunked path re-reads the full 32k q per key chunk and is
+    # the quadratic blow-up being deleted — not timed).
+    K, h = LONG_HEADS, DIMS["opt125m"][1]
+    S = S_LONG
+    q, k, v = _qkv(jax.random.fold_in(key, 99), S, K, h)
+    qpos = jnp.arange(S)
+    shape = (1, S, K, h)
+    qblock = jax.jit(lambda q, k, v: attn_lib._q_block_sdpa(
+        q, k, v, qpos, qpos, True, None, CHUNK))
+    t_q = time_fn(qblock, q, k, v, iters=1, warmup=1)
+    emit("attn_opt125m_s32k_qblock", t_q, shape=shape, heads=K)
+    autotune_dyad("flash_prefill", S, K, h, S, d_mid=1, candidates=CANDS[:1],
+                  iters=1, warmup=1)
+    t_f = time_fn(_flash_fn(S), q, k, v, iters=1, warmup=1)
+    emit("attn_opt125m_s32k_flash", t_f, shape=shape, heads=K,
+         flash_vs_qblock=round(t_q / t_f, 2))
+
+
+def _decode_cells(key):
+    from repro import configs
+    from repro.models import model
+    from repro.serve import ContinuousBatchingEngine, Engine
+
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    params = model.init_params(cfg, key)
+    B, P, MAX = 4, 16, 96
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    for route in ("xla", "flash"):
+        with force_attn_route(route):
+            eng = Engine(cfg, params, max_len=MAX)
+            cache = model.init_cache(cfg, B, MAX, jnp.float32)
+            logits, cache = eng._prefill(params, cache, prompts, None)
+            tok = jnp.argmax(logits[:, -1:], axis=-1)
+            t = time_fn(eng._step, params, cache, tok, iters=3, warmup=1)
+            emit(f"attn_decode_batch_{route}", t, shape=(B, 1, MAX),
+                 engine="batch")
+
+            ce = ContinuousBatchingEngine(cfg, params, n_slots=B,
+                                          max_len=MAX)
+            import numpy as np
+            for i in range(B):
+                ce.submit(np.asarray(prompts[i % B, :P - i]), MAX - P)
+            step = lambda: (ce.step(), jnp.zeros(()))[1]
+            t = time_fn(step, iters=3, warmup=1)
+            emit(f"attn_decode_continuous_{route}", t, shape=(B, 1, MAX),
+                 engine="continuous")
+
+
+@perf.register("attention")
+def run():
+    key = jax.random.PRNGKey(0)
+    _prefill_cells(key)
+    _decode_cells(key)
+
+
+if __name__ == "__main__":
+    run()

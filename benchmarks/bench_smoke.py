@@ -10,6 +10,7 @@ cells, and train-step fused-backward cells.  This is the suite the
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro import perf
@@ -69,6 +70,28 @@ def run():
     emit("smoke_ff_megakernel_fused", t_route["fused"], shape=(TOKENS, D, FF),
          fused_vs_split=round(t_route["split"] / t_route["fused"], 2))
     emit("smoke_ff_megakernel_split", t_route["split"], shape=(TOKENS, D, FF))
+
+    # tiny flash-attention cells: the Pallas prefill kernel vs the chunked
+    # XLA fallback at smoke dims, so attention-kernel regressions fail the
+    # bench-smoke CI gate.  Mirrors the attention suite's protocol.
+    from repro.kernels import flash_attn as fa
+    from repro.layers import attention as attn_lib
+
+    S, K, G, h = 128, 2, 2, 32
+    ks = jax.random.split(key, 3)
+    aq = jax.random.normal(ks[0], (2, S, K, G, h))
+    ak = jax.random.normal(ks[1], (2, S, K, h))
+    av = jax.random.normal(ks[2], (2, S, K, h))
+    qpos = jnp.arange(S)
+    chunked = jax.jit(lambda q, k, v: attn_lib._chunked_sdpa(
+        q, k, v, qpos, qpos, True, None, 64))
+    flash = jax.jit(lambda q, k, v: fa.flash_prefill(
+        q, k, v, causal=True, block_q=64, block_k=128, interpret=True)[0])
+    t_x = time_fn(chunked, aq, ak, av, iters=5)
+    t_f = time_fn(flash, aq, ak, av, iters=5)
+    emit("smoke_attn_chunked", t_x, shape=(2, S, K * G, h))
+    emit("smoke_attn_flash", t_f, shape=(2, S, K * G, h),
+         flash_vs_chunked=round(t_x / t_f, 2))
 
     # tiny train-step record: fused backward vs the einsum-VJP oracle, so
     # backward regressions fail the bench-smoke CI gate.  Reuses the

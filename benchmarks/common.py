@@ -39,6 +39,27 @@ def force_ff_route(route: str):
             os.environ["REPRO_KERNEL_FF"] = prev
 
 
+@contextlib.contextmanager
+def force_attn_route(route: str):
+    """Force the attention route (``flash`` | ``xla``) for the duration of
+    the block: sets ``REPRO_KERNEL_ATTN`` and clears the flash op's trace
+    cache on entry AND exit — the same protocol as :func:`force_ff_route`,
+    shared by the attention and smoke suites."""
+    from repro.kernels import ops as kops
+
+    prev = os.environ.get("REPRO_KERNEL_ATTN")
+    os.environ["REPRO_KERNEL_ATTN"] = route
+    kops._make_flash_attention.cache_clear()
+    try:
+        yield
+    finally:
+        kops._make_flash_attention.cache_clear()
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_ATTN", None)
+        else:
+            os.environ["REPRO_KERNEL_ATTN"] = prev
+
+
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall-time per call in microseconds (jit'd fn) — the shared
     timer from repro.perf.record, so suites and the autotuner measure

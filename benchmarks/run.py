@@ -10,6 +10,9 @@ the last committed baseline.  Mapping to the paper:
 * ff_fused         — beyond-paper: the whole-ff megakernel (one Pallas
                      grid, hidden never leaves VMEM) vs the split kernel
                      chain vs DENSE at OPT-125m/350m ff dims
+* attention        — beyond-paper: flash prefill/decode kernels vs the
+                     XLA sdpa paths at OPT dims (4k/32k), decode-step
+                     latency for both serve engines
 * quality          — Tables 2, 3 (quality parity; offline stand-in stream)
 * memory           — Table 11 (params / checkpoint / in-training memory)
 * width_sweep      — Figure 6 (speedup vs model width)
@@ -46,10 +49,11 @@ def main(argv=None) -> int:
     from repro.perf import registry
 
     # importing the suite modules registers them (repro.perf.register)
-    from benchmarks import (bench_ff_fused, bench_ff_timing,  # noqa: F401
-                            bench_memory, bench_mnist, bench_quality,
-                            bench_serve_throughput, bench_smoke,
-                            bench_train_step, bench_width_sweep)
+    from benchmarks import (bench_attention, bench_ff_fused,  # noqa: F401
+                            bench_ff_timing, bench_memory, bench_mnist,
+                            bench_quality, bench_serve_throughput,
+                            bench_smoke, bench_train_step,
+                            bench_width_sweep)
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite", action="append", default=None,

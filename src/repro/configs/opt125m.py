@@ -12,6 +12,7 @@ def full() -> ModelCfg:
         n_heads=12, n_kv_heads=12, head_dim=64,
         d_ff=3072, act="relu", mlp_bias=True,
         norm="layernorm", pos_embed="learned", max_position=2048,
+        flash_attn=True,
         rope_theta=None, tie_embeddings=True,
         iota_embed=True,
         linear=DYAD_DEFAULT,

@@ -13,6 +13,7 @@ def full() -> ModelCfg:
         n_heads=16, n_kv_heads=16, head_dim=64,
         d_ff=4096, act="relu", mlp_bias=True,
         norm="layernorm", pos_embed="learned", max_position=2048,
+        flash_attn=True,
         rope_theta=None, tie_embeddings=True,
         iota_embed=True,
         linear=DYAD_DEFAULT,

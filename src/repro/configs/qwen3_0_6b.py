@@ -13,6 +13,7 @@ def full() -> ModelCfg:
         qk_norm=True, rope_theta=1e6,
         tie_embeddings=True,
         attn_chunk=2048,
+        flash_attn=True,
         iota_embed=True,
         linear=DYAD_DEFAULT,
         compute_dtype="bfloat16", remat=True,

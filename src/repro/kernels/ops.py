@@ -57,7 +57,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import flash_attn, ref
 from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_mm_blocks,
                                    dyad_mm_blocks_two, dyad_mm_dgrad,
                                    dyad_mm_dgrad_two, dyad_mm_wgrad)
@@ -100,6 +100,19 @@ def _ff_route() -> str:
     forces either; checked at trace time."""
     forced = os.environ.get("REPRO_KERNEL_FF", "").lower()
     return forced if forced in ("fused", "split") else "fused"
+
+
+def attn_route() -> str:
+    """Which route does attention take when the config opts into flash
+    (``cfg.flash_attn``)?  ``flash`` (the Pallas kernels) on TPU, ``xla``
+    (the existing chunked/naive einsum paths) elsewhere — off-TPU the
+    kernels would run the interpreter, which is validation-grade, not a
+    hot path.  ``REPRO_KERNEL_ATTN=flash|xla`` forces either; checked at
+    trace time."""
+    forced = os.environ.get("REPRO_KERNEL_ATTN", "").lower()
+    if forced in ("flash", "xla"):
+        return forced
+    return "flash" if _backend_is_tpu() else "xla"
 
 
 def _bwd_direct(x2d, w1, w2, g2d, variant: str):
@@ -453,3 +466,138 @@ def dyad_ff(params, x, *, act: str = "gelu", use_kernel_bwd: bool = True):
                   params["down"]["w1"], params["down"]["w2"])
     return op(x, params["up"]["w1"], params["up"]["w2"],
               params["down"]["w1"], params["down"]["w2"])
+
+
+# -- the flash-attention ops --------------------------------------------------
+#
+# ``flash_attention`` wraps the fused prefill kernel
+# (:func:`repro.kernels.flash_attn.flash_prefill`) in a custom VJP:
+#
+# * forward — one Pallas grid, online softmax in VMEM (the fwd primal saves
+#   nothing; under differentiation the fwd rule additionally emits the
+#   per-row log-sum-exp residual);
+# * backward — on TPU the flash backward kernels
+#   (:func:`flash_attn.flash_prefill_grads`: dq on the forward grid, dk/dv
+#   on the transposed grid, probabilities RECOMPUTED per tile from the
+#   saved lse); off-TPU a compiled XLA lowering of the same recompute
+#   dataflow (:func:`_flash_bwd_direct`).  ``REPRO_KERNEL_BWD`` forces
+#   either route, exactly like the DYAD ops.
+#
+# The einsum VJP survives as the oracle: ``use_kernel_bwd=False`` swaps the
+# backward to autodiff of :func:`repro.kernels.ref.sdpa_ref`.
+#
+# Positions are ``q_off + arange(S)`` / ``k_off + arange(T)`` (scalars or
+# per-batch vectors) — the contiguous-position contract every dispatch site
+# in ``layers.attention`` satisfies (no-cache forward: k_off = 0;
+# fresh-stream cache prefill: q_off = k_off = idx).
+
+
+def _attn_positions(q_off, k_off, B: int, S: int, T: int):
+    qo = jnp.asarray(q_off, jnp.int32).reshape(-1)[:, None]    # (B?|1, 1)
+    ko = jnp.asarray(k_off, jnp.int32).reshape(-1)[:, None]
+    return qo + jnp.arange(S), ko + jnp.arange(T)              # (B?|1, S/T)
+
+
+def _flash_bwd_direct(q, k, v, o, lse, do, q_off, k_off, causal, window):
+    """Compiled non-TPU lowering of the flash backward: the same
+    recomputed-probability dataflow (p from the saved lse, fp32
+    accumulation) as direct einsum contractions.  Materializes the score
+    tensor — fine for the compiled fallback, wrong for VMEM-bound TPU."""
+    f32 = jnp.float32
+    B, S, K, G, h = q.shape
+    T = k.shape[1]
+    scale = 1.0 / float(h) ** 0.5
+    s = jnp.einsum("bskgh,btkh->bskgt", q, k,
+                   preferred_element_type=f32) * scale
+    qp, kp = _attn_positions(q_off, k_off, B, S, T)
+    m = jnp.ones((max(qp.shape[0], kp.shape[0]), S, T), bool)
+    if causal:
+        m = m & (kp[:, None, :] <= qp[..., :, None])
+    if window is not None:
+        m = m & (qp[..., :, None] - kp[:, None, :] < window)
+    m = m[:, :, None, None, :]
+    # lse rides in the kernel layout (B, K, S*G) -> (B, S, K, G)
+    lse = lse.reshape(B, K, S, G).transpose(0, 2, 1, 3)
+    p = jnp.where(m, jnp.exp(s - lse[..., None]), 0.0)
+    do32 = do.astype(f32)
+    delta = jnp.sum(do32 * o.astype(f32), axis=-1)             # (B,S,K,G)
+    dv = jnp.einsum("bskgt,bskgh->btkh", p, do32,
+                    preferred_element_type=f32)
+    dp = jnp.einsum("bskgh,btkh->bskgt", do32, v,
+                    preferred_element_type=f32)
+    ds = p * (dp - delta[..., None]) * scale
+    dq = jnp.einsum("bskgt,btkh->bskgh", ds, k,
+                    preferred_element_type=f32)
+    dk = jnp.einsum("bskgt,bskgh->btkh", ds, q,
+                    preferred_element_type=f32)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _int_zero(x):
+    """float0 cotangent for the integer offset inputs of the flash op."""
+    import numpy as np
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash_attention(causal: bool, window, use_kernel_bwd: bool):
+    @jax.custom_vjp
+    def op(q, k, v, q_off, k_off):
+        out, _ = flash_attn.flash_prefill(
+            q, k, v, q_off, k_off, causal=causal, window=window,
+            interpret=_interpret())
+        return out
+
+    def fwd(q, k, v, q_off, k_off):
+        out, lse = flash_attn.flash_prefill(
+            q, k, v, q_off, k_off, causal=causal, window=window,
+            save_lse=True, interpret=_interpret())
+        return out, (q, k, v, out, lse, q_off, k_off)
+
+    def bwd(resids, g):
+        q, k, v, o, lse, q_off, k_off = resids
+        if not use_kernel_bwd:
+            # einsum-VJP oracle: autodiff of the reference forward
+            qp, kp = _attn_positions(q_off, k_off, q.shape[0], q.shape[1],
+                                     k.shape[1])
+            qp = qp if qp.shape[0] > 1 else qp[0]
+            kp = kp if kp.shape[0] > 1 else kp[0]
+            _, vjp = jax.vjp(
+                lambda q, k, v: ref.sdpa_ref(q, k, v, qp, kp, causal=causal,
+                                             window=window), q, k, v)
+            dq, dk, dv = vjp(g.astype(q.dtype))
+        elif _use_pallas_bwd():
+            dq, dk, dv = flash_attn.flash_prefill_grads(
+                q, k, v, o, lse, g.astype(q.dtype), q_off, k_off,
+                causal=causal, window=window, interpret=_interpret())
+        else:
+            dq, dk, dv = _flash_bwd_direct(q, k, v, o, lse,
+                                           g.astype(q.dtype), q_off, k_off,
+                                           causal, window)
+        return dq, dk, dv, _int_zero(q_off), _int_zero(k_off)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+def flash_attention(q, k, v, q_off=0, k_off=0, *, causal: bool = True,
+                    window=None, use_kernel_bwd: bool = True):
+    """Fused flash attention: (B,S,K,G,h) x (B,T,K,h) -> (B,S,K,G,h).
+
+    Query/key positions are ``q_off + arange(S)`` / ``k_off + arange(T)``
+    (scalar or per-batch (B,) offsets).  ``use_kernel_bwd=False`` swaps
+    the backward to autodiff of the einsum oracle (``ref.sdpa_ref``)."""
+    q_off = jnp.asarray(q_off, jnp.int32)
+    k_off = jnp.asarray(k_off, jnp.int32)
+    return _make_flash_attention(causal, window, use_kernel_bwd)(
+        q, k, v, q_off, k_off)
+
+
+def flash_decode(q, k, v, idx, *, window=None):
+    """One-token ring-cache decode attention (inference only, no VJP).
+
+    q: (B,1,K,G,h) or (B,K,G,h); k/v: the (B,L,K,h) post-write cache;
+    ``idx``: the current token's write index (scalar or per-slot (B,)).
+    See :func:`repro.kernels.flash_attn.flash_decode`."""
+    return flash_attn.flash_decode(q, k, v, idx, window=window,
+                                   interpret=_interpret())

@@ -110,6 +110,38 @@ def dyad_ff_ref(x, wu1, wu2, wd1, wd2, wg1=None, wg2=None, *,
     return combine(z1, z2, "ot")
 
 
+def sdpa_ref(q, k, v, qpos, kpos, *, causal: bool = True, window=None):
+    """Pure-einsum oracle for the flash-attention kernels
+    (:mod:`repro.kernels.flash_attn` via ``ops.flash_attention``).
+
+    q: (B, S, K, G, h); k, v: (B, T, K, h); qpos: (S,) or (B, S) absolute
+    query positions; kpos: (T,) or (B, T) key positions (< 0 = invalid).
+    Scores accumulate in fp32; masked probabilities are EXPLICITLY zeroed
+    so a fully-masked row yields output 0 (the ``max(l, 1e-30)`` guard) —
+    the exact semantics the kernels implement.  Deliberately independent
+    of ``layers.attention`` so kernel tests have a second opinion.
+    """
+    neg = -1e30
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bskgh,btkh->bskgt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    qp = qpos if qpos.ndim == 2 else qpos[None, :]          # (B?, S)
+    kp = kpos if kpos.ndim == 2 else kpos[None, :]          # (B?, T)
+    m = kp[:, None, :] >= 0
+    if causal:
+        m = m & (kp[:, None, :] <= qp[..., :, None])
+    if window is not None:
+        m = m & (qp[..., :, None] - kp[:, None, :] < window)
+    m = m[:, :, None, None, :]
+    s = jnp.where(m, s, neg)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(m, jnp.exp(s - mx), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(l, 1e-30)
+    return jnp.einsum("bskgt,btkh->bskgh", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
 def dyad_mm_bwd_ref(x, w1, w2, g, *, variant: str = "it"):
     """Pure-einsum VJP oracle for :func:`dyad_mm_ref` — what the kernel
     backward (:func:`repro.kernels.dyad_mm.dyad_mm_dgrad` /

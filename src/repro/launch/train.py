@@ -57,8 +57,11 @@ def main():
         # resolves fwd + dgrad/wgrad tiles at trace time (batch*seq rows).
         from repro.perf.autotune import ensure_tuned_for_model
 
+        # seq_len additionally covers the flash_prefill tiles the training
+        # forward resolves for flash_attn configs
         tuned = ensure_tuned_for_model(cfg, tokens=args.batch * args.seq_len,
-                                       include_bwd=True)
+                                       include_bwd=True,
+                                       seq_len=args.seq_len)
         print(f"[train] autotuned {len(tuned)} kernel-shape entries")
 
     opt = AdamW(lr=schedule.warmup_cosine(args.lr, args.steps // 10 + 1,

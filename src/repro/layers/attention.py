@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import factory
+from repro.kernels import ops as kops
 from repro.layers import norms
 from repro.layers.rotary import apply_rope
 from repro.sharding import ctx as shard_ctx
@@ -62,23 +63,55 @@ def _mask(qpos, kpos, causal: bool, window: Optional[int]):
     return m
 
 
+def _sdpa_mask(qpos, kpos, causal: bool, window: Optional[int]):
+    """Validity mask rank-expanded to broadcast against (B,S,K,G,T) scores
+    — THE shared broadcast/rank-fixup for every sdpa path (``kpos`` may be
+    (T,) or per-batch (B, T); the head axes are always size-1)."""
+    m = _mask(qpos, kpos, causal, window)            # (S, T) or (B,S,T)
+    return (m[:, :, None, None, :] if m.ndim == 3
+            else m[None, :, None, None, :])
+
+
 def _naive_sdpa(q, k, v, qpos, kpos, causal, window):
     """q: (B,S,K,G,h); k,v: (B,T,K,h) -> (B,S,K,G,h).
 
     Inputs stay in the activation dtype; score ACCUMULATION and softmax run
     in fp32 (preferred_element_type), probabilities are cast back for the AV
     matmul.  Scores are laid out (B,S,K,G,T) — q's natural layout — so the
-    einsum chain needs no score-sized transposes (§Perf A4)."""
+    einsum chain needs no score-sized transposes (§Perf A4).  Masked
+    probabilities are explicitly zeroed and the denominator guarded
+    (``max(l, 1e-30)``, parity with ``_chunked_sdpa``): a fully-masked row
+    yields output 0, not the softmax-of-NEG_INF uniform average."""
     scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
     s = jnp.einsum("bskgh,btkh->bskgt", q, k,
                    preferred_element_type=jnp.float32) * scale
-    m = _mask(qpos, kpos, causal, window)            # (S, T) or (B,S,T)
-    m = (m[:, :, None, None, :] if m.ndim == 3
-         else m[None, :, None, None, :])
+    m = _sdpa_mask(qpos, kpos, causal, window)
     s = jnp.where(m, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    e = jnp.where(m, jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)), 0.0)
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
     return jnp.einsum("bskgt,btkh->bskgh", p.astype(v.dtype), v,
                       preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def _online_step(carry, q, kb, vb, qpos, pb, causal, window, scale):
+    """One online-softmax update over a key chunk — THE shared step body
+    for `_chunked_sdpa` and `_q_block_sdpa` (and the contract the flash
+    kernels implement in VMEM).  Masked probabilities are explicitly
+    zeroed so a fully-masked row accumulates l == 0 (-> output 0 after
+    the ``max(l, 1e-30)`` guard) on every route."""
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bskgh,btkh->bskgt", q, kb,
+                   preferred_element_type=jnp.float32) * scale
+    valid = _sdpa_mask(qpos, pb, causal, window)
+    s = jnp.where(valid, s, NEG_INF)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new[..., None]), 0.0)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum(
+        "bskgt,btkh->bskgh", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32)
+    return (m_new, l_new, acc)
 
 
 def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
@@ -101,22 +134,9 @@ def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
           else kpos.reshape(nchunks, chunk))
 
     def step(carry, xs):
-        m_prev, l_prev, acc = carry
         kb, vb, pb = xs
-        s = jnp.einsum("bskgh,btkh->bskgt", q, kb,
-                       preferred_element_type=jnp.float32) * scale
-        valid = _mask(qpos, pb, causal, window)
-        valid = (valid[:, :, None, None, :] if valid.ndim == 3
-                 else valid[None, :, None, None, :])
-        s = jnp.where(valid, s, NEG_INF)
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new[..., None])
-        l_new = l_prev * alpha + p.sum(axis=-1)
-        acc = acc * alpha[..., None] + jnp.einsum(
-            "bskgt,btkh->bskgh", p.astype(vb.dtype), vb,
-            preferred_element_type=jnp.float32)
-        return (m_new, l_new, acc), None
+        return _online_step(carry, q, kb, vb, qpos, pb, causal, window,
+                            scale), None
 
     S, K, G, h = q.shape[1], q.shape[2], q.shape[3], q.shape[4]
     init = (
@@ -130,26 +150,60 @@ def _chunked_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
 
 
 def _q_block_sdpa(q, k, v, qpos, kpos, causal, window, chunk: int):
-    """Block BOTH q and k: unrolled q-blocks with static causal/window bands
-    (skips fully-masked key ranges), online-softmax inside each block.
-    Memory per block: O(chunk^2) scores instead of O(S*T)."""
+    """Block BOTH q and k: a ``lax.scan`` over q-blocks (O(1) trace size —
+    the seed's Python unroll retraced the whole band per block and blew up
+    compile time at 32k) with an inner online-softmax scan over key
+    chunks.  Key chunks wholly outside a q-block's causal/window band are
+    skipped at runtime via ``lax.cond`` on position bounds, so the banded
+    FLOP savings of the old unroll survive the scan.  Memory per step:
+    O(chunk^2) scores instead of O(S*T).  This is the non-Pallas oracle
+    route for long sequences; the production path is the flash kernel."""
     B, S, K, G, h = q.shape
     T = k.shape[1]
     nq = S // chunk
-    banded = causal and T == S   # q/k aligned (plain forward pass)
-    outs = []
-    for i in range(nq):
-        qb = q[:, i * chunk:(i + 1) * chunk]
-        qp = qpos[i * chunk:(i + 1) * chunk]
-        hi = (i + 1) * chunk if banded else T
-        lo = max(0, i * chunk - window + 1) if (window and banded) else 0
-        kb, vb, pb = k[:, lo:hi], v[:, lo:hi], kpos[lo:hi]
-        if hi - lo <= 2 * chunk:
-            ob = _naive_sdpa(qb, kb, vb, qp, pb, causal, window)
-        else:
-            ob = _chunked_sdpa(qb, kb, vb, qp, pb, causal, window, chunk)
-        outs.append(ob)
-    return jnp.concatenate(outs, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    nk = -(-T // chunk)
+    pad = nk * chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, pad),), constant_values=-(10 ** 9))
+    kc = k.reshape(B, nk, chunk, K, h).swapaxes(0, 1)
+    vc = v.reshape(B, nk, chunk, K, h).swapaxes(0, 1)
+    pc = kpos.reshape(nk, chunk)
+
+    def qblock(_, i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, i * chunk, chunk, axis=0)
+
+        def kstep(carry, xs):
+            kb, vb, pb = xs
+
+            def update(c):
+                return _online_step(c, qb, kb, vb, qp, pb, causal, window,
+                                    scale)
+
+            # runtime band skip from position bounds (padding = -1e9 is
+            # excluded from the min/max so it can't widen the band)
+            pvalid = pb >= 0
+            pmax = jnp.max(jnp.where(pvalid, pb, -(10 ** 9)))
+            active = pmax >= 0
+            if causal:
+                pmin = jnp.min(jnp.where(pvalid, pb, 10 ** 9))
+                active &= pmin <= jnp.max(qp)
+            if window is not None:
+                active &= pmax > jnp.min(qp) - window
+            return jax.lax.cond(active, update, lambda c: c, carry), None
+
+        init = (jnp.full((B, chunk, K, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, chunk, K, G), jnp.float32),
+                jnp.zeros((B, chunk, K, G, h), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kstep, init, (kc, vc, pc))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, ob.astype(q.dtype)
+
+    _, outs = jax.lax.scan(qblock, None, jnp.arange(nq))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, K, G, h)
 
 
 def attention(
@@ -165,10 +219,26 @@ def attention(
     causal: bool = True,
     window: Optional[int] = None,
     chunk: Optional[int] = None,
+    flash: bool = False,    # route sdpa through the Pallas flash kernels
     kv_input=None,          # cross-attention source (B, T, D)
     cache=None,             # {"k","v","idx"} for decode
 ):
-    """Returns (out, new_cache)."""
+    """Returns (out, new_cache).
+
+    ``flash=True`` (``cfg.flash_attn``) routes the sdpa through the Pallas
+    flash kernels (:mod:`repro.kernels.flash_attn`) whenever the kernel
+    route is active (TPU, or ``REPRO_KERNEL_ATTN=flash``) and the call
+    shape supports it: the no-cache forward and the cache prefill hit the
+    fused prefill grid (the S < L case attends the post-write cache, so
+    warm-cache continuation prefill is exact), the S=1 decode step hits
+    the ring-cache decode kernel.  Cross-attention, active tensor-parallel
+    sharding contexts, and per-batch (2-D) position vectors fall back to
+    the chunked/naive einsum paths below (which also remain the off-TPU
+    route and the correctness oracles).  CONTRACT: the no-cache flash path
+    assumes 1-D ``positions`` are contiguous (``positions[0] + arange(S)``
+    — true for every model dispatch site; contiguity of a traced vector
+    cannot be checked at trace time); the S >= L windowed-ring prefill
+    keeps that branch's documented fresh-stream assumption."""
     B, S, _ = x.shape
     K, G = n_kv, n_heads // n_kv
     q = factory.apply(params["wq"], x, lin_cfg, site="attn").reshape(B, S, n_heads, head_dim)
@@ -198,6 +268,14 @@ def attention(
         rp = qpos if qpos.ndim > 1 else jnp.broadcast_to(qpos, (S,))
         q = apply_rope(q, rp, rope_theta)
         k = apply_rope(k, rp, rope_theta)
+
+    # flash routing decision (trace time).  The kernels are single-device
+    # dataflows: an active TP sharding context keeps the einsum paths,
+    # whose score layout carries the GSPMD constraints.
+    use_flash = (flash and kv_input is None
+                 and shard_ctx.current() is None
+                 and kops.attn_route() == "flash")
+    k_inflight = v_inflight = None
 
     new_cache = None
     if cache is not None and kv_input is None:
@@ -264,6 +342,7 @@ def attention(
                 cv = jnp.take_along_axis(v.astype(vd), sel[..., None, None],
                                          axis=1)
                 attend_cache = False
+        k_inflight, v_inflight = k, v      # roped new tokens (flash prefill)
         if attend_cache:
             k, v = ck, cv
         new_cache = {"k": ck, "v": cv, "idx": idx + S}
@@ -271,7 +350,33 @@ def attention(
         kpos = jnp.arange(k.shape[1])
 
     qg = q.reshape(B, S, K, G, head_dim)
-    if (chunk is not None and cache is None and kv_input is None
+    if use_flash and cache is not None and kv_input is None and S == 1:
+        # ring-cache decode: per-slot key positions derive from the
+        # scalar-prefetched write index inside the kernel.
+        o = kops.flash_decode(qg, k, v, idx, window=window)
+    elif use_flash and cache is None and qpos.ndim == 1:
+        # plain forward (training / encoder): contiguous positions
+        # qpos[0] + arange(S) against keys at arange(T).
+        o = kops.flash_attention(
+            qg, k, v, qpos[0], 0, causal=causal, window=window,
+            use_kernel_bwd=getattr(lin_cfg, "use_kernel_bwd", True))
+    elif use_flash and cache is not None and S > 1 and causal:
+        if attend_cache:
+            # S < L linear cache prefill: attend the POST-WRITE cache.
+            # Slot j holds position j, queries sit at idx + arange(S), so
+            # q_off=idx / k_off=0 reproduces the einsum branch EXACTLY —
+            # keys cached before ``idx`` included (warm-cache continuation
+            # prefill), tail slots j > idx+s excluded by the causal mask,
+            # out-of-band key tiles band-skipped from the prefetched idx.
+            o = kops.flash_attention(qg, k, v, idx, 0, causal=True,
+                                     window=window)
+        else:
+            # S >= L windowed-ring prefill: the cache cannot hold the
+            # prompt; attend the in-flight roped K/V at idx + arange(S) —
+            # the same fresh-stream contract the einsum branch documents.
+            o = kops.flash_attention(qg, k_inflight, v_inflight, idx, idx,
+                                     causal=True, window=window)
+    elif (chunk is not None and cache is None and kv_input is None
             and S > chunk and S % chunk == 0 and qpos.ndim == 1):
         o = _q_block_sdpa(qg, k, v, qpos, kpos, causal, window, chunk)
     elif chunk is not None and k.shape[1] > chunk:

@@ -75,7 +75,7 @@ def _self_attn(p, cfg: ModelCfg, x, *, causal, cache, positions):
         lin_cfg=cfg.linear,
         rope_theta=cfg.rope_theta if cfg.pos_embed == "rope" else None,
         positions=positions, causal=causal, window=cfg.window,
-        chunk=cfg.attn_chunk, cache=cache)
+        chunk=cfg.attn_chunk, flash=cfg.flash_attn, cache=cache)
 
 
 def _ssm_with_cache(params, cfg: ModelCfg, h, cache, prefill: bool):

@@ -29,6 +29,10 @@ class ModelCfg:
     qkv_bias: bool = False
     window: Optional[int] = None          # sliding-window attention
     attn_chunk: Optional[int] = None      # online-softmax key chunking
+    # route sdpa through the Pallas flash kernels (prefill grid + ring-cache
+    # decode) when the kernel route is active; off-TPU the chunked/naive
+    # einsum paths remain the hot path (REPRO_KERNEL_ATTN forces either)
+    flash_attn: bool = False
     # ff
     d_ff: int = 0
     act: str = "swiglu"

@@ -44,6 +44,17 @@ DEFAULT_FF_BLOCKS: Blocks = {"block_b": 256, "block_o": 256,
 # op keys that resolve 4-axis ff tiles (and carry d_mid in their cache key)
 FF_OPS = ("dyad_ff_fused", "dyad_ff_fused_swiglu")
 
+# flash-attention op keys: ``block_b`` tiles q positions, ``block_k`` tiles
+# the streamed key axis; ``block_o`` is carried but unused (the head dim is
+# never tiled).  Their key names the layer-natural dims
+# (B=q rows|batch, n=KV heads, k=head_dim, o=kv length) and carries the
+# GQA ratio G as ``d_mid`` — G scales the resident q/acc rows (bQ*G), so
+# tiles tuned for one grouping must not collide with another.
+ATTN_OPS = ("flash_prefill", "flash_decode")
+
+DEFAULT_ATTN_BLOCKS: Blocks = {"block_b": 256, "block_o": 128,
+                               "block_k": 512}
+
 # VMEM is ~16 MB/core on TPU v4/v5; leave headroom for double-buffered
 # pipelines (factor 2 on streamed operands) and the fp32 accumulator(s).
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
@@ -195,7 +206,9 @@ def get_tuned_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
         _MEMO_COUNTS["hits"] += 1
         return dict(hit)
     _MEMO_COUNTS["misses"] += 1
-    default = DEFAULT_FF_BLOCKS if op in FF_OPS else DEFAULT_BLOCKS
+    default = (DEFAULT_FF_BLOCKS if op in FF_OPS
+               else DEFAULT_ATTN_BLOCKS if op in ATTN_OPS
+               else DEFAULT_BLOCKS)
     found = get_cache().get(key)
     if found is None:
         out = dict(default)
@@ -249,6 +262,54 @@ def vmem_estimate_ff(bb: int, bo: int, bk: int, bj: int, dtype: str,
                   + 2 * bb * bo) * ib
     acc = 4 * ((2 if gated else 1) * bb * bj + 2 * bb * bo)
     return stream + acc
+
+
+def vmem_estimate_attn(bq: int, bk: int, h: int, g: int,
+                       dtype: str) -> int:
+    """Double-buffered VMEM footprint of one flash grid step.
+
+    Streams: the (bq*g, h) q tile, two (bk, h) K/V tiles, the (bq*g, h)
+    output tile.  Resident fp32 softmax state: m and l (bq*g, 128 lanes
+    each) plus the (bq*g, h) output accumulator; the transient (bq*g, bk)
+    score/probability tile lives through the softmax update and the P·V
+    dot on the same step, so it budgets like a resident buffer."""
+    ib = _dtype_bytes(dtype)
+    rows = bq * g
+    stream = 2 * (rows * h + 2 * bk * h + rows * h) * ib
+    state = 4 * (2 * rows * 128 + rows * h)
+    scores = 4 * 2 * rows * bk            # s + p in flight
+    return stream + state + scores
+
+
+def candidate_blocks_attn(S: int, T: int, h: int, g: int,
+                          dtype: str = "float32", decode: bool = False,
+                          max_candidates: int = 24) -> List[Blocks]:
+    """Power-of-two (block_b = q positions, block_k = keys) sweep for the
+    flash ops, largest tiles first, filtered by :func:`vmem_estimate_attn`.
+    Decode has a single q row per head group: only block_k sweeps."""
+    bqs = ([1] if decode else
+           [b for b in (1024, 512, 256, 128, 64)
+            if b <= max(_next_pow2(S), 64)])
+    bks = [b for b in (1024, 512, 256, 128)
+           if b <= max(_next_pow2(T), 128)]
+    out: List[Blocks] = []
+    base = dict(DEFAULT_ATTN_BLOCKS)
+    cands = ([] if decode else [base]) + [
+        {"block_b": bq, "block_o": 128, "block_k": bk}
+        for bq in bqs for bk in bks]
+    seen = set()
+    for cand in cands:
+        sig = (cand["block_b"], cand["block_k"])
+        if sig in seen:
+            continue
+        seen.add(sig)
+        if vmem_estimate_attn(cand["block_b"], cand["block_k"], h, g,
+                              dtype) > VMEM_BUDGET_BYTES:
+            continue
+        out.append(dict(cand))
+        if len(out) >= max_candidates:
+            break
+    return out
 
 
 def candidate_blocks_ff(B: int, n: int, d_in: int, d_out: int, d_ff: int,
@@ -340,12 +401,64 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     cache = cache or get_cache()
     if op in FF_OPS and d_mid is None:
         raise ValueError(f"{op} needs d_mid (the hidden width d_ff/n)")
+    if op in ATTN_OPS and d_mid is None:
+        raise ValueError(f"{op} needs d_mid (the GQA ratio G)")
     key = tune_key(op, B, n, d_in, d_out, dtype, d_mid=d_mid)
     if not force:
         hit = cache.get(key)
         if hit is not None:
             entry = cache.get_entry(key) or {}
             return hit, float(entry.get("us", 0.0))
+
+    if op in ATTN_OPS:
+        # flash attention: (B, n, d_in, d_out) = (q rows|batch, KV heads,
+        # head_dim, kv length); d_mid is the GQA ratio G.
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import flash_attn
+        from repro.kernels.dyad_mm import _plan_axis
+        from repro.kernels.ops import _interpret
+
+        g = d_mid
+        kd = jnp.dtype(dtype)
+        kx = jax.random.PRNGKey(0)
+        interpret = _interpret()
+        decode = op == "flash_decode"
+        if decode:
+            q = jax.random.normal(kx, (B, n, g, d_in), kd)
+            k = jax.random.normal(jax.random.fold_in(kx, 1),
+                                  (B, d_out, n, d_in), kd)
+            v = jax.random.normal(jax.random.fold_in(kx, 2),
+                                  (B, d_out, n, d_in), kd)
+            idx = jnp.full((B,), d_out - 1, jnp.int32)   # full-cache step
+            kernel = lambda **c: flash_attn.flash_decode(
+                q, k, v, idx, block_k=c["block_k"], interpret=interpret)
+        else:
+            q = jax.random.normal(kx, (1, B, n, g, d_in), kd)
+            k = jax.random.normal(jax.random.fold_in(kx, 1),
+                                  (1, d_out, n, d_in), kd)
+            v = jax.random.normal(jax.random.fold_in(kx, 2),
+                                  (1, d_out, n, d_in), kd)
+            kernel = lambda **c: flash_attn.flash_prefill(
+                q, k, v, 0, 0, causal=True, block_q=c["block_b"],
+                block_k=c["block_k"], interpret=interpret)[0]
+        cands = (list(candidates) if candidates is not None
+                 else candidate_blocks_attn(B, d_out, d_in, g, dtype,
+                                            decode=decode))
+        seen_plans = set()
+        deduped = []
+        for cand in cands:
+            plan = (_plan_axis(B, cand["block_b"], 8),
+                    _plan_axis(d_out, cand["block_k"], 128))
+            if plan in seen_plans:
+                continue
+            seen_plans.add(plan)
+            deduped.append(cand)
+        best, best_us = _time_candidates(kernel, deduped, key, iters, warmup)
+        cache.put(key, best, us=round(best_us, 2), op=op,
+                  candidates=len(deduped))
+        return best, best_us
 
     kd = jnp.dtype(dtype)
     kx = jax.random.PRNGKey(0)
@@ -533,9 +646,24 @@ def bwd_ops_for_variant(variant: str) -> List[str]:
     return [dgrad, "dyad_mm_wgrad"]
 
 
+def model_attn_shape(cfg) -> Optional[Tuple[int, int, int]]:
+    """``(n_kv_heads, gqa_ratio, head_dim)`` when the config routes its
+    attention through the flash kernels (``flash_attn``), else None."""
+    if not getattr(cfg, "flash_attn", False):
+        return None
+    heads, kv = getattr(cfg, "n_heads", 0), getattr(cfg, "n_kv_heads", 0)
+    if heads <= 0 or kv <= 0:
+        return None
+    hd = getattr(cfg, "hd", None) or getattr(cfg, "head_dim", 0)
+    if not hd:
+        return None
+    return kv, heads // kv, hd
+
+
 def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
-                           iters: int = 2,
-                           include_bwd: bool = False) -> Dict[str, Blocks]:
+                           iters: int = 2, include_bwd: bool = False,
+                           seq_len: Optional[int] = None,
+                           kv_len: Optional[int] = None) -> Dict[str, Blocks]:
     """Pre-tune every fused-kernel shape a model will hit with ``tokens``
     rows (decode: batch; prefill: batch*seq; train: batch*seq).  Serving
     calls this at engine construction — and ``launch/train.py --autotune``
@@ -544,11 +672,39 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
     tiles at trace time too).  No-op (empty dict) for configs that don't
     use the Pallas kernel.
 
+    ``seq_len`` additionally tunes the ``flash_prefill`` tiles for that
+    sequence length and ``kv_len`` the ``flash_decode`` tiles for a cache
+    of that length (``tokens`` = decode batch rows; window-bounded ring
+    caches clamp it) — both only for ``cfg.flash_attn`` configs.
+
     ``dtype`` defaults to the config's COMPUTE dtype — ops.py casts weights
     to the activation dtype, so that is the dtype trace-time lookups use."""
     if dtype is None:
         dtype = getattr(cfg, "compute_dtype", None) or "float32"
     tuned: Dict[str, Blocks] = {}
+    attn = model_attn_shape(cfg)
+    if attn is not None:
+        # sweep only when dispatch will actually consult the tiles
+        # (PR-4 precedent: never burn minutes tuning an op that is never
+        # dispatched — off-TPU the flash route needs REPRO_KERNEL_ATTN)
+        from repro.kernels.ops import attn_route
+
+        if attn_route() != "flash":
+            attn = None
+    if attn is not None:
+        kvh, g, hd = attn
+        if seq_len is not None and seq_len > 1:
+            blocks, _ = autotune_dyad("flash_prefill", seq_len, kvh, hd,
+                                      seq_len, dtype, d_mid=g, iters=iters)
+            tuned[tune_key("flash_prefill", seq_len, kvh, hd, seq_len,
+                           dtype, d_mid=g)] = blocks
+        if kv_len is not None:
+            win = getattr(cfg, "window", None)
+            L = min(kv_len, win) if win else kv_len
+            blocks, _ = autotune_dyad("flash_decode", max(tokens, 1), kvh,
+                                      hd, L, dtype, d_mid=g, iters=iters)
+            tuned[tune_key("flash_decode", max(tokens, 1), kvh, hd, L,
+                           dtype, d_mid=g)] = blocks
     variant = getattr(cfg.linear, "variant", "it")
     for n, d_in, d_out in model_dyad_shapes(cfg):
         ops = ["dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"]

@@ -129,9 +129,13 @@ class Engine:
         if self._autotune:
             from repro.perf.autotune import ensure_tuned_for_model
 
-            # cache hits short-circuit, so repeat calls are cheap
-            ensure_tuned_for_model(self.cfg, tokens=B * S)   # prefill rows
-            ensure_tuned_for_model(self.cfg, tokens=B)       # decode rows
+            # cache hits short-circuit, so repeat calls are cheap.  seq_len
+            # covers the flash-prefill tiles, kv_len the flash-decode tiles
+            # over the max_len cache (no-ops for non-flash configs).
+            ensure_tuned_for_model(self.cfg, tokens=B * S,
+                                   seq_len=S)                # prefill rows
+            ensure_tuned_for_model(self.cfg, tokens=B,
+                                   kv_len=self.max_len)      # decode rows
         cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
         logits, cache = self._prefill(self.params, cache, prompt_tokens,
                                       frames)
@@ -277,9 +281,11 @@ class ContinuousBatchingEngine:
         if autotune:
             from repro.perf.autotune import ensure_tuned_for_model
 
-            # tune for the padded decode batch before the step jit traces;
+            # tune for the padded decode batch before the step jit traces
+            # (kv_len covers the flash-decode tiles over the slot caches);
             # prefill buckets are tuned per prompt length in _prefill_one
-            ensure_tuned_for_model(cfg, tokens=max(n_slots, 1))
+            ensure_tuned_for_model(cfg, tokens=max(n_slots, 1),
+                                   kv_len=max_len)
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id, self.temperature = eos_id, float(temperature)
@@ -319,7 +325,8 @@ class ContinuousBatchingEngine:
 
             # the admission prefill sees prompt_len rows; tune that bucket
             # before this trace bakes its tiles in (cache hits are cheap)
-            ensure_tuned_for_model(self.cfg, tokens=prompt_len)
+            ensure_tuned_for_model(self.cfg, tokens=prompt_len,
+                                   seq_len=prompt_len)
         cfg, max_len, dtype = self.cfg, self.max_len, self.cache_dtype
         temperature = self.temperature
 
