@@ -1,4 +1,5 @@
-"""Serving throughput: compiled engine vs the seed Python-loop baselines.
+"""Serving throughput: compiled engine vs the seed Python-loop baselines,
+plus paged-vs-dense continuous batching at a FIXED KV HBM budget.
 
 Measures, over a (batch x seq-len) grid and for DENSE vs DYAD ff:
 
@@ -8,9 +9,19 @@ Measures, over a (batch x seq-len) grid and for DENSE vs DYAD ff:
   ``lax.scan`` for the whole loop) vs the seed Python-loop
   ``Engine.generate_reference``.
 
+The continuous-batching cells hold the KV token-row budget constant
+(``slots * max_len`` dense rows == page pool capacity) and serve the SAME
+mixed-length request trace through the dense per-slot rings and the paged
+engine: paged reserves ``ceil(actual_len / page)`` pages per request
+instead of a worst-case ``max_len`` row, so it runs strictly more
+concurrent requests (``max_concurrent``) and finishes the trace faster
+(``tok_s``).  A prefix-cache cell serves requests sharing a system prompt
+and reports the prefill tokens skipped.
+
 CSV columns: ``name,us_per_call,derived`` where derived carries tokens/sec
-and the compiled-over-baseline speedup.  The acceptance cell is
-``decode b8 n128``: scan decode must be >= 5x the Python loop on CPU.
+and the compiled-over-baseline speedup.  The acceptance cells are
+``decode b8 n128`` (scan decode >= 5x the Python loop on CPU) and
+``cb_paged`` (max_concurrent strictly above the dense cell's).
 
     PYTHONPATH=src python benchmarks/run.py serve_throughput
 """
@@ -20,16 +31,28 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro import configs, perf
 from repro.models import model
-from repro.serve import Engine, prefill_tokenwise
+from repro.serve import ContinuousBatchingEngine, Engine, prefill_tokenwise
 
 ARCH = "qwen3_0_6b"
 PREFILL_GRID = [(1, 32), (4, 64), (8, 128)]     # (batch, prompt_len)
 DECODE_GRID = [(1, 32), (8, 128)]               # (batch, new_tokens)
 PROMPT_FOR_DECODE = 16
+
+# continuous-batching comparison: one shared KV budget of 256 token rows.
+# dense spends it as 4 worst-case slots x 64; paged as a 32-page x 8 pool
+# shared by 12 slot lanes.
+CB_MAX_LEN = 64
+CB_PAGE = 8
+CB_DENSE_SLOTS = 4
+CB_PAGED_SLOTS = 12
+CB_LENGTHS = [8, 12, 16, 24]
+CB_NEW = 8
+CB_REQUESTS = 12
 
 
 def _time(fn, iters=3, warmup=1) -> float:
@@ -101,10 +124,74 @@ def _bench_linear(tag: str, linear) -> None:
          scan_engine_speedup=round(t_seed / t_new, 1))
 
 
+def _drain_tracked(eng, prompts, max_new):
+    """Submit + drain, tracking the peak number of concurrent slots."""
+    for p in prompts:
+        eng.submit(p, max_new)
+    conc = 0
+    while eng.slots.active or eng.queue:
+        conc = max(conc, len(eng.slots.active))
+        eng.step()
+    out = eng.run()          # collects (and clears) the finished list
+    return sum(len(t) for t in out.values()), conc
+
+
+def _bench_continuous() -> None:
+    cfg = configs.get(ARCH, smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            CB_LENGTHS[i % len(CB_LENGTHS)]).astype(np.int32)
+               for i in range(CB_REQUESTS)]
+
+    def timed(make_engine, plist):
+        eng = make_engine()
+        _drain_tracked(eng, plist, CB_NEW)          # warm the jit traces
+        base = dict(getattr(eng, "stats", {}))      # dense engines: no stats
+        t0 = time.perf_counter()
+        total, conc = _drain_tracked(eng, plist, CB_NEW)
+        stats = {k: v - base[k] for k, v in getattr(eng, "stats", {}).items()}
+        return time.perf_counter() - t0, total, conc, stats
+
+    t_d, total, conc_d, _ = timed(lambda: ContinuousBatchingEngine(
+        cfg, params, n_slots=CB_DENSE_SLOTS, max_len=CB_MAX_LEN), prompts)
+    emit(f"serve_cb_dense_s{CB_DENSE_SLOTS}_m{CB_MAX_LEN}", t_d * 1e6,
+         shape=(CB_REQUESTS, CB_MAX_LEN), tok_s=round(total / t_d),
+         max_concurrent=conc_d, kv_rows=CB_DENSE_SLOTS * CB_MAX_LEN)
+    t_p, total, conc_p, _ = timed(lambda: ContinuousBatchingEngine(
+        cfg, params, n_slots=CB_PAGED_SLOTS, max_len=CB_MAX_LEN,
+        page_size=CB_PAGE,
+        n_pages=1 + CB_DENSE_SLOTS * CB_MAX_LEN // CB_PAGE), prompts)
+    emit(f"serve_cb_paged_p{CB_PAGE}_s{CB_PAGED_SLOTS}_m{CB_MAX_LEN}",
+         t_p * 1e6, shape=(CB_REQUESTS, CB_MAX_LEN),
+         tok_s=round(total / t_p), max_concurrent=conc_p,
+         kv_rows=CB_DENSE_SLOTS * CB_MAX_LEN,
+         capacity_vs_dense=round(conc_p / conc_d, 2),
+         tok_s_vs_dense=round(t_d / t_p, 2))
+
+    # prefix caching: the same trace behind a shared 16-token system prompt
+    system = rng.integers(0, cfg.vocab_size, 2 * CB_PAGE).astype(np.int32)
+    shared_prompts = [np.concatenate([system, p]) for p in prompts]
+    total_prompt = sum(len(p) for p in shared_prompts)
+
+    def paged_prefix():
+        return ContinuousBatchingEngine(
+            cfg, params, n_slots=CB_PAGED_SLOTS,
+            max_len=CB_MAX_LEN, page_size=CB_PAGE, prefix_cache=True)
+
+    t_x, total, _, stats = timed(paged_prefix, shared_prompts)
+    emit(f"serve_cb_paged_prefix_p{CB_PAGE}", t_x * 1e6,
+         shape=(CB_REQUESTS, CB_MAX_LEN), tok_s=round(total / t_x),
+         prefix_hits=stats["prefix_hits"],
+         prefill_tokens=stats["prefill_tokens"],
+         prefill_tokens_skipped=total_prompt - stats["prefill_tokens"])
+
+
 @perf.register("serve_throughput")
 def run() -> None:
     _bench_linear("dense", configs.DENSE)
     _bench_linear("dyad", configs.DYAD_DEFAULT)
+    _bench_continuous()
 
 
 if __name__ == "__main__":

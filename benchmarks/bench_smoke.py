@@ -93,6 +93,30 @@ def run():
     emit("smoke_attn_flash", t_f, shape=(2, S, K * G, h),
          flash_vs_chunked=round(t_x / t_f, 2))
 
+    # tiny paged-decode cells: the block-table-gathered decode kernel vs the
+    # dense ring decode kernel over the same logical K/V, so paged-gather
+    # regressions fail the bench-smoke CI gate.
+    Bd, L, P = 4, 128, 16
+    nb = L // P
+    dq = jax.random.normal(ks[0], (Bd, 1, K, G, h))
+    dk = jax.random.normal(ks[1], (Bd, L, K, h))
+    dv = jax.random.normal(ks[2], (Bd, L, K, h))
+    pk = dk.reshape(Bd * nb, P, K, h)
+    pk = jnp.concatenate([jnp.zeros_like(pk[:1]), pk])   # scratch page 0
+    pv = dv.reshape(Bd * nb, P, K, h)
+    pv = jnp.concatenate([jnp.zeros_like(pv[:1]), pv])
+    bt = 1 + jnp.arange(Bd * nb, dtype=jnp.int32).reshape(Bd, nb)
+    idx = jnp.full((Bd,), L - 1, jnp.int32)
+    ring = jax.jit(lambda q, k, v: fa.flash_decode(
+        q, k, v, idx, block_k=128, interpret=True))
+    paged = jax.jit(lambda q, k, v, b: fa.flash_decode_paged(
+        q, k, v, b, idx, block_k=128, interpret=True))
+    t_r = time_fn(ring, dq, dk, dv, iters=5)
+    t_p = time_fn(paged, dq, pk, pv, bt, iters=5)
+    emit("smoke_decode_ring", t_r, shape=(Bd, L, K * G, h))
+    emit("smoke_decode_paged", t_p, shape=(Bd, L, K * G, h),
+         paged_vs_ring=round(t_r / t_p, 2))
+
     # tiny train-step record: fused backward vs the einsum-VJP oracle, so
     # backward regressions fail the bench-smoke CI gate.  Reuses the
     # train_step suite's step builder — same computation, smaller dims.

@@ -57,7 +57,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.dyad_mm import _CompilerParams, _plan_axis
+from repro.kernels.dyad_mm import _CompilerParams, _largest_divisor, _plan_axis
 
 NEG_INF = -1e30
 _TINY = 1e-30
@@ -72,16 +72,21 @@ _STATE_LANES = 128
 
 
 def resolve_attn_blocks(op: str, rows: int, n_kv: int, h: int, kv_len: int,
-                        dtype, g: int, block_q=None, block_k=None):
+                        dtype, g: int, block_q=None, block_k=None,
+                        page: Optional[int] = None):
     """Fill unspecified flash tile sizes from the autotune cache (explicit
     arguments always win).  ``block_b`` in the cached dict tiles q
     positions, ``block_k`` tiles keys; the GQA ratio ``g`` rides in the
-    key as ``d_mid`` (it scales the resident q/acc rows ``bQ*G``)."""
+    key as ``d_mid`` (it scales the resident q/acc rows ``bQ*G``) and the
+    page size rides as ``d_page`` for the paged decode op — a key tile can
+    never span a page boundary, so tiles tuned for one page size must not
+    collide with another."""
     if block_q is None or block_k is None:
         from repro.perf.autotune import get_tuned_blocks
 
         tuned = get_tuned_blocks(op, rows, n_kv, h, kv_len,
-                                 str(jnp.dtype(dtype)), d_mid=g)
+                                 str(jnp.dtype(dtype)), d_mid=g,
+                                 d_page=page)
         block_q = tuned["block_b"] if block_q is None else block_q
         block_k = tuned["block_k"] if block_k is None else block_k
     return block_q, block_k
@@ -694,4 +699,164 @@ def flash_decode(
     v = _pad_axis1(v, Lp).transpose(0, 2, 1, 3)
     o = _decode_impl(q, k, v, _as_offsets(idx, B), bT=bT, l_real=L,
                      window=window, interpret=interpret)
+    return o[:, None] if squeeze else o
+
+
+# -- paged decode: gather K/V tiles through a block table ---------------------
+#
+# The paged-KV variant of :func:`flash_decode`.  The cache is a PAGE POOL
+# ``(n_pages, P, K, h)`` shared by every slot; each slot owns an ordered
+# block table row mapping its logical block ``j // P`` to a physical page.
+# Both the block table and the per-slot write indices are scalar-prefetched,
+# so the K/V index map can route every grid step's DMA to the right page
+# BEFORE the kernel body runs — the gather costs an index computation, not
+# a materialized per-slot cache copy.  The key-tile size is clamped to a
+# divisor of the page size (a tile never spans a page boundary), and tiles
+# wholly beyond a slot's write index are clamped onto the last live tile
+# (revisited block = no DMA) with ``pl.when`` skipping their compute, so
+# short sequences in a long-capacity table cost neither bandwidth nor
+# FLOPs.  Unallocated block-table entries MUST still hold a valid page id
+# (the engine points them at the reserved scratch page 0).
+
+
+def _decode_paged_kernel(idx_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_s,
+                         l_s, acc, *, bT: int, l_real: int,
+                         window: Optional[int], scale: float):
+    b, t = pl.program_id(0), pl.program_id(2)
+    nt = pl.num_programs(2)
+    idx = idx_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    # tiles wholly beyond the write index hold nothing: skip their compute
+    # (their DMA was already clamped onto a live tile by the index map).
+    @pl.when(t * bT <= idx)
+    def _compute():
+        G = q_ref.shape[2]
+        ct = jnp.promote_types(q_ref.dtype, k_ref.dtype)
+        q = q_ref[0, 0].astype(ct)                        # (G, h)
+        k = k_ref[0, 0].astype(ct)                        # (bT, h)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bT)
+        # logical position IS the tile coordinate: the block table is
+        # ordered, pages never wrap (no ring arithmetic).
+        j = jax.lax.broadcasted_iota(jnp.int32, (G, bT), 1) + t * bT
+        mask = jnp.logical_and(j <= idx, j < l_real)
+        if window is not None:
+            mask = jnp.logical_and(mask, idx - j < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_next = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.where(mask, jnp.exp(s - m_next[:, :1]), 0.0)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_s[...] = m_next
+        acc[...] = acc[...] * alpha[:, :1] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        l = l_s[:, :1]
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l, _TINY)).astype(o_ref.dtype)
+
+
+def _paged_kv_index_map(bT: int, tiles_per_page: int):
+    """Route grid step ``t`` of slot ``b`` to page ``bt[b, t*bT // P]``.
+    Dead tiles (beyond the write index) re-request the last live tile so
+    Pallas issues no DMA for them (same-block revisit)."""
+
+    def index(b, kh, t, idx_ref, bt_ref):
+        t_eff = jnp.minimum(t, jnp.maximum(idx_ref[b], 0) // bT)
+        blk = t_eff // tiles_per_page
+        return (bt_ref[b, blk], kh, t_eff % tiles_per_page, 0)
+
+    return index
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bT", "l_real", "window", "interpret")
+)
+def _decode_paged_impl(q, k, v, idx, bt, *, bT, l_real, window, interpret):
+    B, K, G, h = q.shape
+    P = k.shape[2]
+    tp = P // bT
+    nt = bt.shape[1] * tp
+
+    q_spec = pl.BlockSpec((1, 1, G, h), lambda b, kh, t, i, m: (b, kh, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, bT, h), _paged_kv_index_map(bT, tp))
+    scale = 1.0 / float(h) ** 0.5
+    body = functools.partial(_decode_paged_kernel, bT=bT, l_real=l_real,
+                             window=window, scale=scale)
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, K, nt),
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=[q_spec],
+            scratch_shapes=[
+                pltpu.VMEM((G, _STATE_LANES), jnp.float32),
+                pltpu.VMEM((G, _STATE_LANES), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, K, G, h), q.dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx, bt, q, k, v)[0]
+
+
+def flash_decode_paged(
+    q: jax.Array,
+    pages_k: jax.Array,
+    pages_v: jax.Array,
+    block_table: jax.Array,
+    idx,
+    *,
+    l_real: Optional[int] = None,
+    window: Optional[int] = None,
+    block_k: int = None,
+    interpret: bool = False,
+):
+    """One-token decode attention over a PAGED KV cache.
+
+    q: (B, 1, K, G, h) or (B, K, G, h) — the single new (roped) query.
+    pages_k, pages_v: (n_pages, P, K, h) — the shared post-write page pool.
+    ``block_table``: (B, n_blocks) int32, slot b's logical block ``j // P``
+    lives in physical page ``block_table[b, j // P]`` (unallocated entries
+    must point at a valid page — the engine's scratch page 0).  ``idx``:
+    (B,) per-slot write index of the current token; logical positions are
+    the tile coordinates themselves (ordered block tables, no ring).
+    ``l_real`` bounds the logical length when the capacity ``n_blocks * P``
+    overshoots it (page sizes that don't divide max_len).
+    Returns (B, 1, K, G, h) / (B, K, G, h) matching the q rank.
+    """
+    squeeze = q.ndim == 5
+    if squeeze:
+        q = q[:, 0]
+    B, K, G, h = q.shape
+    P = pages_k.shape[1]
+    NB = block_table.shape[1]
+    cap = NB * P
+    if l_real is None:
+        l_real = cap
+    _, bk = resolve_attn_blocks("flash_decode_paged", B, K, h, cap, q.dtype,
+                                G, None, block_k, page=P)
+    # a key tile must stay inside one page: largest divisor of P under the
+    # requested tile (pages are pow2 in practice, so this is a pow2 clamp)
+    bT = _largest_divisor(P, max(min(bk, P), 1))
+    k = pages_k.transpose(0, 2, 1, 3)                     # (NP, K, P, h)
+    v = pages_v.transpose(0, 2, 1, 3)
+    o = _decode_paged_impl(q, k, v, _as_offsets(idx, B),
+                           jnp.asarray(block_table, jnp.int32),
+                           bT=bT, l_real=int(l_real), window=window,
+                           interpret=interpret)
     return o[:, None] if squeeze else o

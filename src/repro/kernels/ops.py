@@ -601,3 +601,18 @@ def flash_decode(q, k, v, idx, *, window=None):
     See :func:`repro.kernels.flash_attn.flash_decode`."""
     return flash_attn.flash_decode(q, k, v, idx, window=window,
                                    interpret=_interpret())
+
+
+def flash_decode_paged(q, pages_k, pages_v, block_table, idx, *,
+                       l_real=None, window=None):
+    """One-token paged-cache decode attention (inference only, no VJP).
+
+    q: (B,1,K,G,h) or (B,K,G,h); pages_k/pages_v: the (n_pages,P,K,h)
+    shared page pool; ``block_table``: (B, n_blocks) int32 page ids (dead
+    entries must point at the reserved scratch page 0); ``idx``: per-slot
+    (B,) write index of the current token.  ``l_real`` bounds the logical
+    length when the block-table capacity overshoots it.
+    See :func:`repro.kernels.flash_attn.flash_decode_paged`."""
+    return flash_attn.flash_decode_paged(
+        q, pages_k, pages_v, block_table, idx, l_real=l_real, window=window,
+        interpret=_interpret())

@@ -51,6 +51,18 @@ def main():
                     help="continuous engine: cache slots (padded batch)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="continuous engine: retire sequences at this token")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="continuous engine: paged KV cache with this many "
+                         "tokens per page (default: dense per-slot rings)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="paged mode: physical pages in the pool incl. "
+                         "scratch (default: full-capacity slots)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="paged mode: prefill prompts in chunks of this "
+                         "many tokens, interleaved with decode steps")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged mode: share full prompt-prefix pages "
+                         "between requests (skips re-prefill)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
@@ -77,7 +89,9 @@ def main():
         engine = ContinuousBatchingEngine(
             cfg, params, n_slots=args.slots, max_len=max_len,
             eos_id=args.eos_id, temperature=args.temperature, seed=args.seed,
-            autotune=args.autotune)
+            autotune=args.autotune, page_size=args.page_size,
+            n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache)
         lengths = [max(1, args.prompt_len - (i % 4)) for i in range(args.requests)]
         prompts = [
             jax.random.randint(jax.random.fold_in(key, i), (lengths[i],), 0,
@@ -91,6 +105,8 @@ def main():
         print(f"[serve] continuous: {args.requests} requests over "
               f"{args.slots} slots, {total} tokens in {dt:.2f}s "
               f"({total / dt:.1f} tok/s)")
+        if engine.paged:
+            print(f"[serve] paged: {engine.stats}")
         print({u: results[u][:8] for u in uids[:4]})
         return
 

@@ -221,7 +221,9 @@ def attention(
     chunk: Optional[int] = None,
     flash: bool = False,    # route sdpa through the Pallas flash kernels
     kv_input=None,          # cross-attention source (B, T, D)
-    cache=None,             # {"k","v","idx"} for decode
+    cache=None,             # {"k","v","idx"} (dense ring) or
+                            # {"pages_k","pages_v","block_table","idx"}
+                            # (paged pool) for decode
 ):
     """Returns (out, new_cache).
 
@@ -278,7 +280,41 @@ def attention(
     k_inflight = v_inflight = None
 
     new_cache = None
-    if cache is not None and kv_input is None:
+    paged = cache is not None and "block_table" in cache
+    if paged and kv_input is None:
+        # -- paged pool: write through the block table, gather per slot --
+        # The cache is a shared page pool (n_pages, P, K, h) + a per-slot
+        # block table (B, NB): slot b's logical position j lives in page
+        # ``bt[b, j // P]`` at offset ``j % P``.  Positions never wrap
+        # (ordered tables — the engine hands out fresh pages instead), so
+        # kpos is simply j bounded by the write index, exactly the
+        # unwrapped dense-ring layout.  Dead/free lanes must have their
+        # table rows pointed at the reserved scratch page 0 by the engine,
+        # so their writes land harmlessly off the live pages.
+        idx = cache["idx"]                       # (B,) per-slot
+        bt = cache["block_table"]                # (B, NB) page ids
+        P = cache["pages_k"].shape[1]
+        NB = bt.shape[1]
+        Lcap = NB * P
+        kd, vd = cache["pages_k"].dtype, cache["pages_v"].dtype
+        j = idx[:, None] + jnp.arange(S)         # (B, S) absolute positions
+        pid = jnp.take_along_axis(bt, jnp.clip(j // P, 0, NB - 1), axis=1)
+        ck = cache["pages_k"].at[pid, j % P].set(k.astype(kd))
+        cv = cache["pages_v"].at[pid, j % P].set(v.astype(vd))
+        new_cache = {"pages_k": ck, "pages_v": cv, "block_table": bt,
+                     "idx": idx + S}
+        k_inflight, v_inflight = k, v
+        attend_cache = True
+        jl = jnp.arange(Lcap)[None, :]
+        kpos = jnp.where(jl < (idx + S)[:, None], jl, -(10 ** 9))
+        if not (use_flash and S == 1):
+            # einsum / flash-prefill paths attend a per-slot DENSE view
+            # gathered from the pool (the S=1 flash decode path instead
+            # gathers in-kernel through the prefetched block table).
+            gpid = bt[:, jnp.arange(Lcap) // P]  # (B, Lcap)
+            k = ck[gpid, jnp.arange(Lcap) % P]   # (B, Lcap, K, h)
+            v = cv[gpid, jnp.arange(Lcap) % P]
+    elif cache is not None and kv_input is None:
         idx = cache["idx"]
         L = cache["k"].shape[1]
         kd, vd = cache["k"].dtype, cache["v"].dtype
@@ -350,7 +386,13 @@ def attention(
         kpos = jnp.arange(k.shape[1])
 
     qg = q.reshape(B, S, K, G, head_dim)
-    if use_flash and cache is not None and kv_input is None and S == 1:
+    if use_flash and paged and kv_input is None and S == 1:
+        # paged decode: K/V tiles are gathered through the scalar-prefetched
+        # block table in-kernel — the dense per-slot view is never built.
+        o = kops.flash_decode_paged(qg, new_cache["pages_k"],
+                                    new_cache["pages_v"], bt, idx,
+                                    window=window)
+    elif use_flash and cache is not None and kv_input is None and S == 1:
         # ring-cache decode: per-slot key positions derive from the
         # scalar-prefetched write index inside the kernel.
         o = kops.flash_decode(qg, k, v, idx, window=window)
@@ -396,4 +438,23 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
         "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
         "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
         "idx": jnp.zeros((batch,) if per_slot else (), jnp.int32),
+    }
+
+
+def init_paged_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                        dtype=jnp.bfloat16, *, page_size: int,
+                        n_pages: int):
+    """Paged KV cache pytree: one shared ``(n_pages, page_size, K, h)``
+    pool per K/V, a per-slot ``(batch, ceil(max_len / page_size))`` block
+    table, and per-slot write indices.  Page 0 is RESERVED as the scratch
+    page: block tables init to it, so unallocated entries (and the decode
+    writes of free/prefilling lanes the engine points at it) land
+    harmlessly off the live pages.  The engine's ``PageAllocator`` owns
+    pages ``1 .. n_pages - 1``."""
+    n_blocks = -(-max_len // page_size)
+    return {
+        "pages_k": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+        "pages_v": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+        "block_table": jnp.zeros((batch, n_blocks), jnp.int32),
+        "idx": jnp.zeros((batch,), jnp.int32),
     }

@@ -194,18 +194,28 @@ def _cross_from_cache(p, cfg: ModelCfg, q_in, cache):
 
 
 def init_block_cache(cfg: ModelCfg, kind: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16, *, per_slot: bool = False):
+                     dtype=jnp.bfloat16, *, per_slot: bool = False,
+                     page_size: int = None, n_pages: int = None):
     """Cache pytree for ONE block (stacked over layers by the model).
 
     ``per_slot=True`` gives the KV cache a per-batch-row write index so each
     row (continuous-batching slot) can sit at a different sequence position.
+    ``page_size``/``n_pages`` swap the dense KV ring for a paged pool +
+    block table (see :func:`repro.layers.attention.init_paged_kv_cache`);
+    the write index is per-slot by construction there.
     """
     c = {}
     if kind in ("lm", "moe", "hybrid", "dec_cross"):
-        # ring buffer when sliding-window attention bounds the reach
-        L = min(max_len, cfg.window) if cfg.window else max_len
-        c["kv"] = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads, cfg.hd,
-                                         dtype, per_slot=per_slot)
+        if page_size is not None:
+            c["kv"] = attn_lib.init_paged_kv_cache(
+                batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
+                page_size=page_size, n_pages=n_pages)
+        else:
+            # ring buffer when sliding-window attention bounds the reach
+            L = min(max_len, cfg.window) if cfg.window else max_len
+            c["kv"] = attn_lib.init_kv_cache(batch, L, cfg.n_kv_heads,
+                                             cfg.hd, dtype,
+                                             per_slot=per_slot)
     if kind in ("ssm", "hybrid"):
         c["ssm"] = ssm_lib.init_ssm_cache(
             batch, cfg.d_model, d_state=cfg.ssm_state,

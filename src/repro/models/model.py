@@ -163,14 +163,19 @@ def loss_fn(cfg: ModelCfg, params, batch):
 
 
 def init_cache(cfg: ModelCfg, batch: int, max_len: int, dtype=jnp.bfloat16,
-               *, per_slot: bool = False):
+               *, per_slot: bool = False, page_size: int = None,
+               n_pages: int = None):
     """Stacked (n_layers-leading) decode cache for ``batch`` sequences.
 
     ``per_slot=True`` gives every leaf a batch axis at position 1 — including
     the KV write index, which becomes (n_layers, batch) so each slot advances
-    independently (the continuous-batching layout)."""
+    independently (the continuous-batching layout).  ``page_size``/``n_pages``
+    swap the dense KV rings for per-layer page pools + block tables (the
+    paged serving layout; every layer gets its own pool slice, so one page id
+    addresses the same logical page in all of them)."""
     one = blocks.init_block_cache(cfg, block_kind(cfg), batch, max_len, dtype,
-                                  per_slot=per_slot)
+                                  per_slot=per_slot, page_size=page_size,
+                                  n_pages=n_pages)
     stacked = jax.tree.map(
         lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape).copy()
         if leaf.ndim > 0 else jnp.zeros((cfg.n_layers,), leaf.dtype), one)

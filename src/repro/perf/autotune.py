@@ -49,8 +49,11 @@ FF_OPS = ("dyad_ff_fused", "dyad_ff_fused_swiglu")
 # never tiled).  Their key names the layer-natural dims
 # (B=q rows|batch, n=KV heads, k=head_dim, o=kv length) and carries the
 # GQA ratio G as ``d_mid`` — G scales the resident q/acc rows (bQ*G), so
-# tiles tuned for one grouping must not collide with another.
-ATTN_OPS = ("flash_prefill", "flash_decode")
+# tiles tuned for one grouping must not collide with another.  The paged
+# decode op additionally carries the page size as ``d_page``: its key tile
+# is clamped to a divisor of the page, so tiles tuned for one page size
+# must not collide with another.
+ATTN_OPS = ("flash_prefill", "flash_decode", "flash_decode_paged")
 
 DEFAULT_ATTN_BLOCKS: Blocks = {"block_b": 256, "block_o": 128,
                                "block_k": 512}
@@ -69,14 +72,17 @@ def _next_pow2(x: int) -> int:
 
 def tune_key(op: str, B: int, n: int, d_in: int, d_out: int,
              dtype: str = "float32", backend: Optional[str] = None,
-             d_mid: Optional[int] = None) -> str:
+             d_mid: Optional[int] = None,
+             d_page: Optional[int] = None) -> str:
     """Canonical cache key; B is bucketed to the next power of two.
     ``d_mid`` (the ff megakernel's hidden width d_ff/n) extends the key for
     ops whose tiling couples three weight tensors — omitted (and absent
-    from the key) for the single-matmul ops."""
+    from the key) for the single-matmul ops.  ``d_page`` extends it again
+    for the paged decode op (key tiles clamp to the page size)."""
     backend = backend or _backend()
     mid = f"|j{d_mid}" if d_mid is not None else ""
-    return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}{mid}"
+    page = f"|p{d_page}" if d_page is not None else ""
+    return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}{mid}{page}"
             f"|{dtype}|{backend}")
 
 
@@ -195,12 +201,14 @@ def reset_cache(cache: Optional[BlockCache] = None) -> None:
 def get_tuned_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
                      dtype: str = "float32",
                      backend: Optional[str] = None,
-                     d_mid: Optional[int] = None) -> Blocks:
+                     d_mid: Optional[int] = None,
+                     d_page: Optional[int] = None) -> Blocks:
     """Tuned blocks for this key, else the hardcoded defaults (the 4-axis
     ff defaults for the megakernel ops, which also pass ``d_mid``).  Called
     by the kernel wrappers at trace time; memoized in-process so repeated
     jit traces don't re-consult the JSON-backed cache per call site."""
-    key = tune_key(op, B, n, d_in, d_out, dtype, backend, d_mid=d_mid)
+    key = tune_key(op, B, n, d_in, d_out, dtype, backend, d_mid=d_mid,
+                   d_page=d_page)
     hit = _MEMO.get(key)
     if hit is not None:
         _MEMO_COUNTS["hits"] += 1
@@ -380,6 +388,7 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
                   cache: Optional[BlockCache] = None,
                   force: bool = False,
                   d_mid: Optional[int] = None,
+                  d_page: Optional[int] = None,
                   act: str = "gelu") -> Tuple[Blocks, float]:
     """Sweep block sizes for one kernel shape; persist and return the winner.
 
@@ -403,7 +412,9 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         raise ValueError(f"{op} needs d_mid (the hidden width d_ff/n)")
     if op in ATTN_OPS and d_mid is None:
         raise ValueError(f"{op} needs d_mid (the GQA ratio G)")
-    key = tune_key(op, B, n, d_in, d_out, dtype, d_mid=d_mid)
+    if op == "flash_decode_paged" and d_page is None:
+        raise ValueError(f"{op} needs d_page (the KV page size)")
+    key = tune_key(op, B, n, d_in, d_out, dtype, d_mid=d_mid, d_page=d_page)
     if not force:
         hit = cache.get(key)
         if hit is not None:
@@ -424,8 +435,23 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         kd = jnp.dtype(dtype)
         kx = jax.random.PRNGKey(0)
         interpret = _interpret()
-        decode = op == "flash_decode"
-        if decode:
+        decode = op in ("flash_decode", "flash_decode_paged")
+        if op == "flash_decode_paged":
+            # worst-case admitted state: every slot holds a full-length
+            # sequence, each in its own pages (plus the scratch page 0)
+            P = d_page
+            nb = -(-d_out // P)
+            q = jax.random.normal(kx, (B, n, g, d_in), kd)
+            pk = jax.random.normal(jax.random.fold_in(kx, 1),
+                                   (1 + B * nb, P, n, d_in), kd)
+            pv = jax.random.normal(jax.random.fold_in(kx, 2),
+                                   (1 + B * nb, P, n, d_in), kd)
+            bt = 1 + jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+            idx = jnp.full((B,), d_out - 1, jnp.int32)   # full-cache step
+            kernel = lambda **c: flash_attn.flash_decode_paged(
+                q, pk, pv, bt, idx, l_real=d_out, block_k=c["block_k"],
+                interpret=interpret)
+        elif decode:
             q = jax.random.normal(kx, (B, n, g, d_in), kd)
             k = jax.random.normal(jax.random.fold_in(kx, 1),
                                   (B, d_out, n, d_in), kd)
@@ -449,8 +475,16 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         seen_plans = set()
         deduped = []
         for cand in cands:
-            plan = (_plan_axis(B, cand["block_b"], 8),
-                    _plan_axis(d_out, cand["block_k"], 128))
+            if op == "flash_decode_paged":
+                # the wrapper clamps the key tile to a page divisor:
+                # distinct requests collapsing to one effective tile would
+                # only measure noise twice
+                from repro.kernels.dyad_mm import _largest_divisor
+                plan = _largest_divisor(d_page,
+                                        max(min(cand["block_k"], d_page), 1))
+            else:
+                plan = (_plan_axis(B, cand["block_b"], 8),
+                        _plan_axis(d_out, cand["block_k"], 128))
             if plan in seen_plans:
                 continue
             seen_plans.add(plan)
@@ -663,7 +697,9 @@ def model_attn_shape(cfg) -> Optional[Tuple[int, int, int]]:
 def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
                            iters: int = 2, include_bwd: bool = False,
                            seq_len: Optional[int] = None,
-                           kv_len: Optional[int] = None) -> Dict[str, Blocks]:
+                           kv_len: Optional[int] = None,
+                           page_size: Optional[int] = None
+                           ) -> Dict[str, Blocks]:
     """Pre-tune every fused-kernel shape a model will hit with ``tokens``
     rows (decode: batch; prefill: batch*seq; train: batch*seq).  Serving
     calls this at engine construction — and ``launch/train.py --autotune``
@@ -675,7 +711,9 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
     ``seq_len`` additionally tunes the ``flash_prefill`` tiles for that
     sequence length and ``kv_len`` the ``flash_decode`` tiles for a cache
     of that length (``tokens`` = decode batch rows; window-bounded ring
-    caches clamp it) — both only for ``cfg.flash_attn`` configs.
+    caches clamp it) — both only for ``cfg.flash_attn`` configs.  A paged
+    engine passes ``page_size`` too, which swaps the decode op for
+    ``flash_decode_paged`` (the page size rides in its cache key).
 
     ``dtype`` defaults to the config's COMPUTE dtype — ops.py casts weights
     to the activation dtype, so that is the dtype trace-time lookups use."""
@@ -701,10 +739,19 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
         if kv_len is not None:
             win = getattr(cfg, "window", None)
             L = min(kv_len, win) if win else kv_len
-            blocks, _ = autotune_dyad("flash_decode", max(tokens, 1), kvh,
-                                      hd, L, dtype, d_mid=g, iters=iters)
-            tuned[tune_key("flash_decode", max(tokens, 1), kvh, hd, L,
-                           dtype, d_mid=g)] = blocks
+            if page_size is not None:
+                blocks, _ = autotune_dyad(
+                    "flash_decode_paged", max(tokens, 1), kvh, hd, L, dtype,
+                    d_mid=g, d_page=page_size, iters=iters)
+                tuned[tune_key("flash_decode_paged", max(tokens, 1), kvh,
+                               hd, L, dtype, d_mid=g,
+                               d_page=page_size)] = blocks
+            else:
+                blocks, _ = autotune_dyad("flash_decode", max(tokens, 1),
+                                          kvh, hd, L, dtype, d_mid=g,
+                                          iters=iters)
+                tuned[tune_key("flash_decode", max(tokens, 1), kvh, hd, L,
+                               dtype, d_mid=g)] = blocks
     variant = getattr(cfg.linear, "variant", "it")
     for n, d_in, d_out in model_dyad_shapes(cfg):
         ops = ["dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"]

@@ -1,8 +1,10 @@
 """Serving: single-pass prefill + scan-compiled decode over persistent
-KV/SSM caches, with continuous batching for heterogeneous requests."""
+KV/SSM caches, with continuous batching for heterogeneous requests and an
+optional paged KV cache (page pool + block tables + prefix sharing)."""
 from repro.serve.engine import (  # noqa: F401
     ContinuousBatchingEngine,
     Engine,
+    PageAllocator,
     Request,
     SlotManager,
     make_serve_step,

@@ -25,13 +25,31 @@ write index ``idx`` (``(n_layers,)`` scalar-per-layer, or ``(n_layers, B)``
 per-slot); SSM caches hold ``conv`` ``(n_layers, B, W-1, Ch)`` and the fp32
 ``state`` ``(n_layers, B, H, P, N)``.  Logits are always fp32
 ``(B, 1, vocab)``.
+
+Paged mode (``ContinuousBatchingEngine(page_size=...)``): the per-slot dense
+rings become ONE shared page pool per layer plus per-slot block tables (see
+:func:`repro.layers.attention.init_paged_kv_cache`).  A :class:`PageAllocator`
+owns the physical pages with refcounts; admission reserves exactly
+``ceil((prompt + max_new - 1) / page_size)`` pages per request — instead of a
+worst-case ``max_len`` row — so the same HBM admits strictly more concurrent
+requests whenever traffic runs shorter than the worst case (no preemption:
+reservation is up-front, a request can never OOM mid-flight).  Prompts can
+prefill in chunks interleaved with decode steps (``prefill_chunk=``), and
+``prefix_cache=True`` hashes full prompt pages so requests sharing a system
+prompt retain the original pages instead of re-prefilling them.  The device
+block tables / write indices are re-pushed from HOST truth before every
+batch decode step, with non-decoding lanes pointed at the reserved scratch
+page 0 — their garbage writes can never corrupt live pages.
+``REPRO_PAGED_KV=off`` is the escape hatch back to dense rings.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import hashlib
 import itertools
+import os
 from typing import Dict, List, Optional
 
 import jax
@@ -252,6 +270,53 @@ class SlotManager:
         self._free.append(slot)
 
 
+class PageAllocator:
+    """Ref-counted allocator over the physical KV pages ``1 .. n_pages-1``
+    (page 0 is the reserved scratch page — never handed out; dead
+    block-table entries point at it).
+
+    ``alloc`` hands out a free page at refcount 1; ``retain`` adds a
+    reference (prefix sharing); ``release`` drops one and returns the page
+    to the free pool when the count hits zero.  Invariants (the
+    property-based tests drive them under randomized schedules): a page is
+    never handed out twice while referenced, refcounts never go negative,
+    and every allocated page eventually returns to the pool."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least one non-scratch page")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.refcount = np.zeros((n_pages,), np.int32)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("page pool exhausted")
+        page = self._free.pop()
+        assert self.refcount[page] == 0, f"page {page} handed out twice"
+        self.refcount[page] = 1
+        return page
+
+    def retain(self, page: int) -> None:
+        if not 1 <= page < self.n_pages or self.refcount[page] <= 0:
+            raise ValueError(f"retain of unallocated page {page}")
+        self.refcount[page] += 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; True when the page went back to the pool."""
+        if not 1 <= page < self.n_pages or self.refcount[page] <= 0:
+            raise ValueError(f"release of unallocated page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous batching: heterogeneous requests share ONE
     jitted padded-batch decode step.
@@ -268,15 +333,38 @@ class ContinuousBatchingEngine:
 
     Greedy when ``temperature <= 0``; otherwise softmax sampling with a
     per-step folded key (shared across slots).
+
+    Paged mode (``page_size=N``): the slot caches become a shared page pool
+    with per-slot block tables; admission reserves pages for the request's
+    actual length instead of a worst-case ``max_len`` row (see the module
+    docstring).  ``n_pages`` bounds the pool (default: enough for every
+    slot at full ``max_len`` — shrink it to trade worst-case capacity for
+    HBM); ``prefill_chunk`` prefills prompts in chunks interleaved with
+    decode steps; ``prefix_cache=True`` shares full prompt-prefix pages
+    between requests.  Only the pure-KV families (lm / moe) support paged
+    mode; ``REPRO_PAGED_KV=off`` forces dense rings.
     """
 
     def __init__(self, cfg: ModelCfg, params, *, n_slots: int = 8,
                  max_len: int = 256, eos_id: Optional[int] = None,
                  temperature: float = 0.0, cache_dtype=jnp.float32,
-                 seed: int = 0, autotune: bool = False):
+                 seed: int = 0, autotune: bool = False,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False):
         if cfg.family in ("vlm", "encdec"):
             raise NotImplementedError(
                 "continuous batching currently serves token-only families")
+        if os.environ.get("REPRO_PAGED_KV", "").lower() in ("0", "off",
+                                                            "dense"):
+            page_size = None                       # escape hatch
+        if page_size is not None and cfg.family not in ("lm", "moe"):
+            raise NotImplementedError(
+                "paged KV serves the pure-KV families (lm/moe); SSM and "
+                "hybrid caches keep dense rings")
+        self.paged = page_size is not None
+        self.page_size = page_size
         self._autotune = autotune
         if autotune:
             from repro.perf.autotune import ensure_tuned_for_model
@@ -285,13 +373,34 @@ class ContinuousBatchingEngine:
             # (kv_len covers the flash-decode tiles over the slot caches);
             # prefill buckets are tuned per prompt length in _prefill_one
             ensure_tuned_for_model(cfg, tokens=max(n_slots, 1),
-                                   kv_len=max_len)
+                                   kv_len=max_len, page_size=page_size)
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id, self.temperature = eos_id, float(temperature)
         self.cache_dtype = cache_dtype
-        self.cache = model.init_cache(cfg, n_slots, max_len, cache_dtype,
-                                      per_slot=True)
+        if self.paged:
+            self.n_blocks = -(-max_len // page_size)      # blocks per slot
+            if n_pages is None:
+                n_pages = 1 + n_slots * self.n_blocks     # + scratch page 0
+            self.pages = PageAllocator(n_pages)
+            self.cache = model.init_cache(cfg, n_slots, max_len, cache_dtype,
+                                          page_size=page_size,
+                                          n_pages=n_pages)
+            # HOST truth: block tables + reserved-block counts per slot.
+            # The device copies are re-pushed before every batch step.
+            self._bt = np.zeros((n_slots, self.n_blocks), np.int32)
+            self._nblk = np.zeros((n_slots,), np.int32)
+            self._prefilling: Dict[int, int] = {}   # slot -> tokens prefilled
+            self.prefill_chunk = prefill_chunk
+            self.prefix_cache = bool(prefix_cache)
+            self._prefix: Dict[bytes, int] = {}       # hash chain -> page id
+            self._page_hash: Dict[int, bytes] = {}    # page id -> hash key
+            self._chunk_fns: Dict[int, callable] = {}
+            self.stats = {"prefill_chunks": 0, "prefill_tokens": 0,
+                          "prefix_hits": 0, "prefix_pages_shared": 0}
+        else:
+            self.cache = model.init_cache(cfg, n_slots, max_len, cache_dtype,
+                                          per_slot=True)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)   # last token per slot
         self.slots = SlotManager(n_slots)
         self.queue: collections.deque = collections.deque()
@@ -349,6 +458,176 @@ class ContinuousBatchingEngine:
                 full, one.astype(full.dtype), slot, axis=1),
             batch_cache, one_cache)
 
+    # -- paged machinery ----------------------------------------------------
+    def _chunk_fn(self, chunk_len: int):
+        """Paged prefill of one prompt chunk for one slot, jitted per chunk
+        length.  The chunk runs as a B=1 "view" over the SHARED page pools:
+        K/V writes land directly in the slot's reserved pages (no per-slot
+        dense cache, no slot-row scatter copy), while the device block
+        table / write index are synthesized per call from host truth —
+        ``_sync_control`` rebuilds the real device copies before every
+        batch decode step, so only the pools need merging back."""
+        if chunk_len in self._chunk_fns:
+            return self._chunk_fns[chunk_len]
+        if self._autotune:
+            from repro.perf.autotune import ensure_tuned_for_model
+
+            ensure_tuned_for_model(self.cfg, tokens=chunk_len,
+                                   seq_len=chunk_len)
+        cfg, temperature = self.cfg, self.temperature
+        n_layers = self.cfg.n_layers
+
+        def chunk(params, cache, tokens, bt_row, pos, key):
+            kv = cache["kv"]
+            view = {"kv": {
+                "pages_k": kv["pages_k"],
+                "pages_v": kv["pages_v"],
+                "block_table": jnp.broadcast_to(
+                    bt_row[None, None], (n_layers, 1) + bt_row.shape),
+                "idx": jnp.full((n_layers, 1), pos, jnp.int32),
+            }}
+            logits, view = model.prefill(cfg, params, view, tokens)
+            tok = sample_token(logits, temperature,
+                               key if temperature > 0.0 else None)
+            new_cache = dict(cache)
+            new_cache["kv"] = dict(kv)
+            new_cache["kv"]["pages_k"] = view["kv"]["pages_k"]
+            new_cache["kv"]["pages_v"] = view["kv"]["pages_v"]
+            return tok.astype(jnp.int32), new_cache
+
+        self._chunk_fns[chunk_len] = jax.jit(chunk)
+        return self._chunk_fns[chunk_len]
+
+    def _advance_prefill(self, slot: int) -> None:
+        """Prefill the next chunk of ``slot``'s prompt; on the last chunk,
+        sample the first token and hand the slot to the decode batch."""
+        pos = self._prefilling[slot]
+        req = self.slots.active[slot]
+        S = len(req.prompt)
+        chunk = (S - pos if not self.prefill_chunk
+                 else min(self.prefill_chunk, S - pos))
+        self._clock += 1
+        key = jax.random.fold_in(self._key, self._clock)
+        fn = self._chunk_fn(chunk)
+        tok, self.cache = fn(
+            self.params, self.cache,
+            jnp.asarray(req.prompt[pos:pos + chunk])[None, :],
+            jnp.asarray(self._bt[slot]), pos, key)
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += chunk
+        pos += chunk
+        if pos >= S:
+            del self._prefilling[slot]
+            self._register_prefix(req, slot)
+            self.tokens = self.tokens.at[slot].set(tok[0])
+            self._emit(req, int(tok[0, 0]))
+        else:
+            self._prefilling[slot] = pos
+
+    def _prefix_keys(self, prompt: np.ndarray) -> List[bytes]:
+        """Rolling hash chain over the FULL pages of a prompt: key i commits
+        to ``prompt[:(i+1) * page_size]``, so equal keys mean equal token
+        prefixes (and therefore equal K/V page contents)."""
+        h = hashlib.sha1()
+        keys = []
+        P = self.page_size
+        for i in range(len(prompt) // P):
+            h.update(np.ascontiguousarray(prompt[i * P:(i + 1) * P])
+                     .tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def _match_prefix(self, prompt: np.ndarray):
+        """Longest registered full-page prefix of ``prompt``, capped so at
+        least ONE prompt token remains to prefill (the last-token logits
+        that seed decode must come from this request's own forward)."""
+        if not self.prefix_cache:
+            return 0, []
+        limit = (len(prompt) - 1) // self.page_size
+        pages: List[int] = []
+        for key in self._prefix_keys(prompt)[:limit]:
+            pid = self._prefix.get(key)
+            if pid is None:
+                break
+            pages.append(pid)
+        return len(pages), pages
+
+    def _register_prefix(self, req: Request, slot: int) -> None:
+        """After a prompt finishes prefilling, publish its full pages for
+        future sharers.  The registry does NOT hold a reference: entries
+        drop when their page goes back to the pool (last sharer retires)."""
+        if not self.prefix_cache:
+            return
+        for i, key in enumerate(self._prefix_keys(req.prompt)):
+            pid = int(self._bt[slot, i])
+            if key in self._prefix or pid in self._page_hash:
+                continue
+            self._prefix[key] = pid
+            self._page_hash[pid] = key
+
+    def _release_page(self, page: int) -> None:
+        if self.pages.release(page):        # back in the pool: unpublish
+            key = self._page_hash.pop(page, None)
+            if key is not None:
+                self._prefix.pop(key, None)
+
+    def _release_slot_pages(self, slot: int) -> None:
+        for i in range(int(self._nblk[slot])):
+            self._release_page(int(self._bt[slot, i]))
+        self._bt[slot] = 0
+        self._nblk[slot] = 0
+
+    def _sync_control(self) -> None:
+        """Push HOST-truth block tables / write indices to the device cache.
+        Decoding lanes get their true table and length; free and
+        mid-prefill lanes are pointed at scratch (page 0, index 0) so their
+        padding-lane decode writes can never touch a live page."""
+        bt = self._bt.copy()
+        idx = self.slots.lengths.astype(np.int32)
+        for s in range(self.n_slots):
+            if s not in self.slots.active or s in self._prefilling:
+                bt[s] = 0
+                idx[s] = 0
+        n_layers = self.cfg.n_layers
+        self.cache = dict(self.cache)
+        self.cache["kv"] = dict(self.cache["kv"])
+        self.cache["kv"]["block_table"] = jnp.asarray(
+            np.broadcast_to(bt[None], (n_layers,) + bt.shape))
+        self.cache["kv"]["idx"] = jnp.asarray(
+            np.broadcast_to(idx[None], (n_layers,) + idx.shape))
+
+    def _admit_paged(self) -> None:
+        """Admit queued requests while a slot AND enough pages are free.
+
+        Reservation is up-front and exact: ``ceil((S + max_new - 1) / P)``
+        pages cover every K/V write this request can make, so admission is
+        the only place that can block — an admitted request never OOMs.
+        Prefix-matched pages are retained (shared), not re-allocated, and
+        their tokens are skipped by the prefill."""
+        while self.queue and self.slots.free_slots:
+            req = self.queue[0]
+            S = len(req.prompt)
+            nblk = max(1, -(-(S + req.max_new - 1) // self.page_size))
+            m, shared = self._match_prefix(req.prompt)
+            if self.pages.free_pages < nblk - m:
+                return          # head-of-line blocking keeps arrival order
+            self.queue.popleft()
+            slot = self.slots.alloc(req, S)
+            for pid in shared:
+                self.pages.retain(pid)
+            self._bt[slot, :m] = shared
+            for i in range(m, nblk):
+                self._bt[slot, i] = self.pages.alloc()
+            self._nblk[slot] = nblk
+            if m:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_pages_shared"] += m
+            self._prefilling[slot] = m * self.page_size
+            if not self.prefill_chunk:
+                # unchunked: the whole remaining prompt is one chunk, so
+                # admission completes the prefill exactly like dense mode
+                self._advance_prefill(slot)
+
     # -- request lifecycle --------------------------------------------------
     def submit(self, prompt, max_new: int) -> int:
         """Queue a prompt ((S,) ints) for up to ``max_new`` generated tokens.
@@ -360,6 +639,12 @@ class ContinuousBatchingEngine:
                 f"max_len {self.max_len}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if self.paged:
+            need = max(1, -(-(prompt.size + max_new - 1) // self.page_size))
+            if need > self.pages.n_pages - 1:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.pages.n_pages - 1}")
         req = Request(uid=next(self._uid), prompt=prompt, max_new=max_new)
         self.queue.append(req)
         self._admit()
@@ -367,6 +652,9 @@ class ContinuousBatchingEngine:
 
     def _admit(self) -> None:
         """Move queued requests into free slots (prefill + slot write)."""
+        if self.paged:
+            self._admit_paged()
+            return
         while self.queue and self.slots.free_slots:
             req = self.queue.popleft()
             slot = self.slots.alloc(req, len(req.prompt))
@@ -385,21 +673,36 @@ class ContinuousBatchingEngine:
             or len(req.tokens) >= req.max_new \
             or self.slots.lengths[req.slot] >= self.max_len  # cache row full
         if done:
+            if self.paged:
+                self._release_slot_pages(req.slot)
             self.slots.release(req.slot)
             self.finished.append(req)
 
     def step(self) -> List[Request]:
-        """One padded-batch decode step; returns requests finished this step."""
-        if not self.slots.active:
+        """One padded-batch decode step; returns requests finished this step.
+
+        Paged mode interleaves: each mid-prefill slot advances ONE chunk
+        first (a slot whose prompt completes joins the decode batch in the
+        same step), then every decoding slot takes its token."""
+        before = len(self.finished)
+        if self.paged and self._prefilling:
+            for slot in sorted(self._prefilling):
+                self._advance_prefill(slot)
+            self._admit()           # chunk completions may have freed slots
+        decoding = [s for s in self.slots.active
+                    if not (self.paged and s in self._prefilling)]
+        if not decoding:
             self._admit()
-            return []
+            return self.finished[before:]
         self._clock += 1
         key = jax.random.fold_in(self._key, self._clock)
+        if self.paged:
+            self._sync_control()
         self.tokens, self.cache = self._batch_step(
             self.params, self.cache, self.tokens, key)
         emitted = np.asarray(self.tokens[:, 0])
-        before = len(self.finished)
-        for slot, req in list(self.slots.active.items()):
+        for slot in decoding:
+            req = self.slots.active[slot]
             self.slots.lengths[slot] += 1
             self._emit(req, int(emitted[slot]))
         self._admit()

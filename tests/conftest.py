@@ -1,9 +1,12 @@
 """Tier-1 test configuration.
 
-The suite must collect on a bare container (jax + pytest only).  When the
-real ``hypothesis`` library is missing, install the deterministic stub from
-``tests/_hypothesis_stub.py`` under the ``hypothesis`` /
+The suite must collect on a bare container (jax + pytest only).  The real
+``hypothesis`` is a declared dev dependency (``pip install -e ".[test]"``,
+what CI runs); when it is missing locally, the deterministic fallback stub
+from ``tests/_hypothesis_stub.py`` is installed under the ``hypothesis`` /
 ``hypothesis.strategies`` module names BEFORE test modules import it.
+Set ``REPRO_REQUIRE_HYPOTHESIS=1`` (CI does) to fail loudly instead of
+falling back — the stub can never silently mask a broken install there.
 """
 import importlib.util
 import os
@@ -15,7 +18,10 @@ def _install_hypothesis_stub() -> None:
         import hypothesis  # noqa: F401
         return
     except ModuleNotFoundError:
-        pass
+        if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+            raise RuntimeError(
+                "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not "
+                "installed — run `pip install -e \".[test]\"`")
     import types
 
     # load relative to this file — works for both `python -m pytest` and a

@@ -1,0 +1,460 @@
+"""Paged KV cache: allocator/block-table properties under randomized
+schedules, paged-vs-dense serving equivalence, the paged flash-decode
+kernel vs the einsum oracle, prefix caching, and autotune integration."""
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.kernels import flash_attn as fa
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.models import model
+from repro.perf import autotune
+from repro.perf.autotune import BlockCache, tune_key
+from repro.serve import ContinuousBatchingEngine, PageAllocator
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def cache(tmp_path):
+    """Isolated BlockCache installed as the process singleton."""
+    c = BlockCache(user_path=str(tmp_path / "blocks.json"),
+                   defaults_path=str(tmp_path / "defaults.json"))
+    autotune.reset_cache(c)
+    yield c
+    autotune.reset_cache(None)
+
+
+@functools.lru_cache(maxsize=None)
+def _small_model():
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    return cfg, model.init_params(cfg, KEY)
+
+
+# -- allocator properties -----------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_pages=st.integers(2, 17))
+def test_page_allocator_properties(seed, n_pages):
+    """Randomized alloc/retain/release schedules: a page is never handed
+    out while referenced, refcounts never go negative, and draining every
+    reference returns EVERY page to the pool."""
+    rng = random.Random(seed)
+    pool = PageAllocator(n_pages)
+    held = []                       # one entry per outstanding reference
+    for _ in range(rng.randrange(1, 60)):
+        op = rng.random()
+        if op < 0.45 and pool.free_pages:
+            page = pool.alloc()
+            assert 1 <= page < n_pages          # scratch page 0 never leaves
+            assert held.count(page) == 0, "page handed out while referenced"
+            held.append(page)
+        elif op < 0.65 and held:
+            page = rng.choice(held)
+            pool.retain(page)
+            held.append(page)
+        elif held:
+            page = held.pop(rng.randrange(len(held)))
+            freed = pool.release(page)
+            assert freed == (page not in held)
+        assert (pool.refcount >= 0).all()
+        assert pool.refcount[0] == 0
+        for page in set(held):
+            assert pool.refcount[page] == held.count(page)
+        assert pool.free_pages == n_pages - 1 - len(set(held))
+    while held:
+        pool.release(held.pop())
+    assert pool.free_pages == n_pages - 1
+    assert (pool.refcount == 0).all()
+
+
+def test_page_allocator_errors():
+    with pytest.raises(ValueError):
+        PageAllocator(1)
+    pool = PageAllocator(3)
+    with pytest.raises(ValueError):
+        pool.release(1)             # never allocated
+    with pytest.raises(ValueError):
+        pool.retain(0)              # scratch page is not allocatable
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {1, 2}
+    with pytest.raises(RuntimeError):
+        pool.alloc()                # exhausted
+    pool.release(a)
+    pool.release(b)
+    with pytest.raises(ValueError):
+        pool.release(b)             # double release
+
+
+# -- engine block-table bookkeeping under randomized schedules ----------------
+
+
+_ENGINES = {}
+
+
+def _shared_engine(**kw):
+    """One engine per config, reused across hypothesis examples so the jit
+    traces stay warm (each example fully drains it)."""
+    key = tuple(sorted(kw.items()))
+    if key not in _ENGINES:
+        cfg, params = _small_model()
+        _ENGINES[key] = ContinuousBatchingEngine(
+            cfg, params, cache_dtype=jnp.float32, **kw)
+    return _ENGINES[key]
+
+
+def _check_paged_invariants(eng):
+    P = eng.page_size
+    held = []
+    for slot, req in eng.slots.active.items():
+        nblk = int(eng._nblk[slot])
+        S = len(req.prompt)
+        # reservation is exact: every possible write covered, nothing more
+        assert nblk == max(1, -(-(S + req.max_new - 1) // P))
+        row = eng._bt[slot, :nblk]
+        assert (row > 0).all(), "live block table points at scratch"
+        assert (eng._bt[slot, nblk:] == 0).all()
+        assert nblk * P >= eng.slots.lengths[slot]   # covers written length
+        for pid in row:
+            assert eng.pages.refcount[pid] > 0
+        held.extend(row.tolist())
+    if not eng.prefix_cache:
+        assert len(held) == len(set(held)), "page assigned to two slots"
+    assert (eng.pages.refcount >= 0).all()
+    assert eng.pages.free_pages == int((eng.pages.refcount[1:] == 0).sum())
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 3))
+def test_engine_page_bookkeeping_randomized(seed):
+    """Randomized submit/step/retire schedules through the REAL engine:
+    block-table and refcount invariants hold at every step, and draining
+    the engine returns every page."""
+    rng = random.Random(seed)
+    eng = _shared_engine(n_slots=2, max_len=16, page_size=4,
+                         n_pages=9, prefix_cache=False)
+    rng2 = np.random.default_rng(seed)
+    for _ in range(rng.randrange(2, 5)):
+        S = rng.choice([3, 5, 8])
+        prompt = rng2.integers(0, eng.cfg.vocab_size, S).astype(np.int32)
+        eng.submit(prompt, rng.choice([2, 4]))
+        _check_paged_invariants(eng)
+        for _ in range(rng.randrange(0, 3)):
+            eng.step()
+            _check_paged_invariants(eng)
+    while eng.slots.active or eng.queue:
+        eng.step()
+        _check_paged_invariants(eng)
+    eng.finished = []
+    assert eng.pages.free_pages == eng.pages.n_pages - 1
+    assert (eng.pages.refcount == 0).all()
+    assert (eng._bt == 0).all() and (eng._nblk == 0).all()
+
+
+def test_paged_pool_exhaustion_blocks_admission():
+    """A queued request that doesn't fit the remaining pages must wait (not
+    crash, not steal) until a retirement frees them; one that can NEVER fit
+    the pool is rejected at submit."""
+    cfg, params = _small_model()
+    # pool of 3 usable pages, page_size 4: one request of nblk=3 fills it
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=16,
+                                   cache_dtype=jnp.float32, page_size=4,
+                                   n_pages=4)
+    rng = np.random.default_rng(0)
+    u1 = eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 4)
+    u2 = eng.submit(rng.integers(0, cfg.vocab_size, 5).astype(np.int32), 4)
+    # 8+4-1 -> 3 pages reserved; 5+4-1 -> 2 more don't fit: queued
+    assert len(eng.queue) == 1 and eng.slots.free_slots == 1
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(13, np.int32), 4)    # needs 4 pages: can't ever
+    res = eng.run()
+    assert len(res[u1]) == 4 and len(res[u2]) == 4
+    assert eng.pages.free_pages == 3
+
+
+# -- paged vs dense serving equivalence ---------------------------------------
+
+
+def _run_engine(cfg, params, prompts, max_new, eos_id=None, **kw):
+    eng = ContinuousBatchingEngine(cfg, params, cache_dtype=jnp.float32,
+                                   eos_id=eos_id, **kw)
+    uids = [eng.submit(p, mn) for p, mn in zip(prompts, max_new)]
+    res = eng.run()
+    return [res[u] for u in uids], eng
+
+
+def test_paged_matches_dense_engine():
+    """The tentpole equivalence: paged block-table serving must emit
+    token-for-token what the dense per-slot rings emit, under mixed prompt
+    lengths, more requests than slots (slot reuse), EOS retirement, and
+    chunked prefill — greedy, bitwise."""
+    cfg, params = _small_model()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+               for s in (5, 9, 3, 12, 7)]
+    max_new = [6, 4, 8, 3, 5]
+    kw = dict(n_slots=3, max_len=16)
+    want, _ = _run_engine(cfg, params, prompts, max_new, **kw)
+    # an EOS the model actually emits mid-stream, to force early retirement
+    eos = want[2][2]
+    want_eos, _ = _run_engine(cfg, params, prompts, max_new, eos_id=eos, **kw)
+    assert any(len(a) < len(b) for a, b in zip(want_eos, want))
+    for label, pkw in [
+        ("paged", dict(page_size=4)),
+        ("paged small pool", dict(page_size=4, n_pages=9)),
+        ("paged chunked", dict(page_size=4, prefill_chunk=4)),
+        ("paged chunked prefix", dict(page_size=4, prefill_chunk=3,
+                                      prefix_cache=True)),
+    ]:
+        got, eng = _run_engine(cfg, params, prompts, max_new, **kw, **pkw)
+        assert got == want, label
+        got, eng = _run_engine(cfg, params, prompts, max_new, eos_id=eos,
+                               **kw, **pkw)
+        assert got == want_eos, label
+        assert eng.pages.free_pages == eng.pages.n_pages - 1, label
+
+
+def test_paged_kv_env_escape_hatch(monkeypatch):
+    cfg, params = _small_model()
+    monkeypatch.setenv("REPRO_PAGED_KV", "off")
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=16,
+                                   page_size=4)
+    assert not eng.paged and "block_table" not in eng.cache["kv"]
+
+
+def test_paged_rejects_stateful_families():
+    cfg = configs.get("mamba2_780m", smoke=True)
+    params = model.init_params(cfg, KEY)
+    with pytest.raises(NotImplementedError):
+        ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=16,
+                                 page_size=4)
+
+
+# -- paged decode kernel vs oracle --------------------------------------------
+
+
+def _paged_case(P, l_real, idxs, dtype, seed=0):
+    """Random pool + per-slot heterogeneous block tables (+2 spare pages so
+    tables are NOT the identity layout), and the dense gathered view."""
+    B, K, G, h = len(idxs), 2, 2, 16
+    NB = -(-l_real // P)
+    NP = 1 + B * NB + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, K, G, h), dtype)
+    pk = jax.random.normal(ks[1], (NP, P, K, h), dtype)
+    pv = jax.random.normal(ks[2], (NP, P, K, h), dtype)
+    rng = np.random.default_rng(seed)
+    bt = rng.permutation(np.arange(1, NP))[:B * NB].reshape(B, NB)
+    bt = jnp.asarray(bt, jnp.int32)
+    return q, pk, pv, bt, jnp.asarray(idxs, jnp.int32)
+
+
+def _paged_oracle(q, pk, pv, bt, idxs, l_real, window):
+    B, NB = bt.shape
+    P = pk.shape[1]
+    cap = NB * P
+    kpos = jnp.where(jnp.arange(cap) < l_real, jnp.arange(cap), -(10 ** 9))
+    outs = []
+    for b in range(B):
+        dk = pk[bt[b]].reshape(cap, *pk.shape[2:])[None]
+        dv = pv[bt[b]].reshape(cap, *pv.shape[2:])[None]
+        outs.append(ref.sdpa_ref(
+            q[b:b + 1].astype(jnp.float32), dk.astype(jnp.float32),
+            dv.astype(jnp.float32), jnp.array([int(idxs[b])]), kpos,
+            causal=True, window=window))
+    return jnp.concatenate(outs, axis=0)
+
+
+@pytest.mark.parametrize("P,l_real,idxs,window,dtype", [
+    (4, 16, [3, 15], None, jnp.float32),     # dividing pages, mixed fill
+    (8, 37, [5, 36, 20], None, jnp.float32),  # P does not divide l_real
+    (4, 12, [11], 5, jnp.float32),            # sliding window
+    (16, 16, [0, 7], None, jnp.bfloat16),     # single page; idx=0 edge
+])
+def test_paged_decode_vs_oracle(P, l_real, idxs, window, dtype):
+    """Kernel vs einsum oracle over the GATHERED dense view: heterogeneous
+    (permuted) block tables, capacity overshooting l_real, windows, bf16."""
+    q, pk, pv, bt, idx = _paged_case(P, l_real, idxs, dtype)
+    want = _paged_oracle(q, pk, pv, bt, idx, l_real, window)
+    got = fa.flash_decode_paged(q, pk, pv, bt, idx, l_real=l_real,
+                                window=window, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_paged_decode_tile_invariance():
+    """Key-tile choice changes only the schedule — and tiles are clamped to
+    divisors of the page size, so none may span a page boundary."""
+    q, pk, pv, bt, idx = _paged_case(8, 32, [3, 30], jnp.float32)
+    outs = [fa.flash_decode_paged(q, pk, pv, bt, idx, block_k=bk,
+                                  interpret=True)
+            for bk in (2, 8, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=2e-5)
+
+
+def test_paged_decode_scratch_garbage_isolated():
+    """Dead block-table entries point at scratch page 0; poisoning scratch
+    (and every unreferenced page) with huge values must not perturb the
+    output — masked probabilities are exact zeros."""
+    P, l_real, idxs = 4, 16, [2]
+    q, pk, pv, bt, idx = _paged_case(P, l_real, idxs, jnp.float32)
+    want = fa.flash_decode_paged(q, pk, pv, bt, idx, interpret=True)
+    live = set(np.asarray(bt).ravel().tolist())
+    poison = np.asarray(pk).copy()
+    for page in range(pk.shape[0]):
+        if page not in live:
+            poison[page] = 1e30
+    # also poison live pages BEYOND the write index's block
+    bt_host = np.asarray(bt)
+    for blk in range(int(idxs[0]) // P + 1, bt.shape[1]):
+        poison[bt_host[0, blk]] = 1e30
+    got = fa.flash_decode_paged(q, jnp.asarray(poison), pv, bt, idx,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_model_decode_paged_vs_dense_bitwise():
+    """Through the real model: a paged cache (block tables covering max_len
+    exactly) decodes BITWISE identically to the dense per-slot cache."""
+    cfg, params = _small_model()
+    B, S, M, P = 2, 6, 16, 4
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    cd = model.init_cache(cfg, B, M, dtype=jnp.float32, per_slot=True)
+    ld, cd = model.prefill(cfg, params, cd, toks)
+    NB = M // P
+    cp = model.init_cache(cfg, B, M, dtype=jnp.float32, page_size=P,
+                          n_pages=1 + B * NB)
+    bt = 1 + np.arange(B * NB, dtype=np.int32).reshape(B, NB)
+    cp["kv"]["block_table"] = jnp.broadcast_to(
+        jnp.asarray(bt), cp["kv"]["block_table"].shape)
+    lp, cp = model.prefill(cfg, params, cp, toks)
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(lp))
+    tok = jnp.argmax(ld[:, -1:], axis=-1)
+    for _ in range(3):
+        dd, cd = model.decode_step(cfg, params, cd, tok)
+        dp, cp = model.decode_step(cfg, params, cp, tok)
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(dp))
+        tok = jnp.argmax(dd[:, -1:], axis=-1)
+
+
+# -- prefix caching -----------------------------------------------------------
+
+
+def test_prefix_cache_skips_shared_prefill_and_frees_late():
+    """Two requests sharing a 2-page system prompt: the second's shared
+    pages are retained (its prefill skips them), outputs are unchanged,
+    and the shared pages return to the pool only when the LAST referencing
+    slot retires."""
+    cfg, params = _small_model()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    p1 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 3)
+                         .astype(np.int32)])
+    p2 = np.concatenate([shared, rng.integers(0, cfg.vocab_size, 5)
+                         .astype(np.int32)])
+    kw = dict(n_slots=2, max_len=20)
+    want, _ = _run_engine(cfg, params, [p1, p2], [2, 6], **kw)
+
+    eng = ContinuousBatchingEngine(cfg, params, cache_dtype=jnp.float32,
+                                   page_size=4, prefix_cache=True, **kw)
+    u1 = eng.submit(p1, 2)
+    u2 = eng.submit(p2, 6)
+    s1 = next(s for s, r in eng.slots.active.items() if r.uid == u1)
+    s2 = next(s for s, r in eng.slots.active.items() if r.uid == u2)
+    # the second request shares the first's two prefix pages (refcount 2)
+    shared_pages = eng._bt[s1, :2].copy()
+    np.testing.assert_array_equal(eng._bt[s2, :2], shared_pages)
+    assert all(eng.pages.refcount[p] == 2 for p in shared_pages)
+    # and its prefill dispatched only the unshared tail
+    assert eng.stats["prefix_hits"] == 1
+    assert eng.stats["prefix_pages_shared"] == 2
+    assert eng.stats["prefill_chunks"] == 2
+    assert eng.stats["prefill_tokens"] == len(p1) + (len(p2) - 8)
+
+    # run until the first request retires: shared pages must stay live
+    res = {}
+    while u1 not in res:
+        res.update({r.uid: r.tokens for r in eng.step()})
+    assert u2 not in res
+    assert all(eng.pages.refcount[p] == 1 for p in shared_pages)
+    assert all(p in eng._page_hash for p in shared_pages)  # still published
+    while eng.slots.active or eng.queue:
+        res.update({r.uid: r.tokens for r in eng.step()})
+    assert [res[u1], res[u2]] == want
+    assert eng.pages.free_pages == eng.pages.n_pages - 1
+    assert not eng._prefix and not eng._page_hash
+
+
+# -- autotune integration -----------------------------------------------------
+
+
+def test_paged_tune_key_includes_page_size():
+    base = tune_key("flash_decode_paged", 2, 2, 16, 32, d_mid=2, d_page=8)
+    assert "|p8" in base
+    assert base != tune_key("flash_decode_paged", 2, 2, 16, 32, d_mid=2,
+                            d_page=16)
+
+
+def test_paged_tiles_resolved_at_trace_time(cache, monkeypatch):
+    """Acceptance spy: tuned flash_decode_paged tiles (keyed WITH the page
+    size) are consulted at trace time of a jitted paged decode."""
+    from repro.perf import autotune as at
+
+    B, K, G, h, P, NB = 2, 2, 2, 8, 8, 4
+    tuned = {"block_b": 1, "block_o": 128, "block_k": 256}
+    cache.put(tune_key("flash_decode_paged", B, K, h, NB * P, d_mid=G,
+                       d_page=P), tuned, us=1.0)
+    seen = {}
+    real = at.get_tuned_blocks
+
+    def spy(op, *a, **kw):
+        out = real(op, *a, **kw)
+        seen[op] = dict(out)
+        return out
+
+    monkeypatch.setattr(at, "get_tuned_blocks", spy)
+    q = jnp.zeros((B, 1, K, G, h))
+    pool = jnp.zeros((1 + B * NB, P, K, h))
+    bt = jnp.zeros((B, NB), jnp.int32)
+    idx = jnp.zeros((B,), jnp.int32)
+    jax.jit(lambda *a: kops.flash_decode_paged(*a)).lower(
+        q, pool, pool, bt, idx)
+    assert seen["flash_decode_paged"] == tuned
+
+
+def test_autotune_sweeps_paged_decode(cache):
+    blocks, us = autotune.autotune_dyad(
+        "flash_decode_paged", 2, 2, 16, 32, d_mid=2, d_page=8, iters=1,
+        candidates=[{"block_b": 1, "block_o": 128, "block_k": 8},
+                    {"block_b": 1, "block_o": 128, "block_k": 128}])
+    assert blocks["block_k"] in (8, 128) and us > 0
+    with pytest.raises(ValueError):
+        autotune.autotune_dyad("flash_decode_paged", 2, 2, 16, 32, d_mid=2,
+                               iters=1,
+                               candidates=[{"block_b": 1, "block_o": 128,
+                                            "block_k": 8}])
+
+
+def test_ensure_tuned_covers_paged(cache, monkeypatch):
+    from repro.perf.autotune import ensure_tuned_for_model
+
+    cfg, _ = _small_model()
+    monkeypatch.setenv("REPRO_KERNEL_ATTN", "flash")
+    tuned = ensure_tuned_for_model(cfg, tokens=2, iters=1, kv_len=32,
+                                   page_size=8)
+    paged = [k for k in tuned if k.startswith("flash_decode_paged")]
+    assert paged and all("|p8" in k for k in paged)
+    # page_size swaps the decode op: the dense flash_decode key is absent
+    assert not any(k.startswith("flash_decode|") for k in tuned)
