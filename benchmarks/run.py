@@ -46,6 +46,7 @@ sys.path.insert(0, _ROOT)
 
 
 def main(argv=None) -> int:
+    from repro import obs
     from repro.perf import registry
 
     # importing the suite modules registers them (repro.perf.register)
@@ -63,6 +64,10 @@ def main(argv=None) -> int:
                         "(default: repo root)")
     p.add_argument("--no-json", action="store_true",
                    help="print CSV only, skip BENCH_<suite>.json")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="record suite/autotune spans while benchmarking and "
+                        "export Chrome-trace JSON here (diff two runs with "
+                        "python -m repro.perf.timeline)")
     p.add_argument("--list", action="store_true",
                    help="list registered suites and exit")
     p.add_argument("legacy_suites", nargs="*",
@@ -73,16 +78,24 @@ def main(argv=None) -> int:
         print("\n".join(registry.available_suites()))
         return 0
 
+    if args.trace:
+        obs.enable()
+
     wanted = (args.suite or []) + args.legacy_suites
     wanted = wanted or registry.available_suites()
     print("name,us_per_call,derived")
     for name in wanted:
         t0 = time.time()
-        rec = registry.run_suite(name, out_dir=args.out_dir,
-                                 write=not args.no_json)
+        with obs.span(f"suite:{name}", cat="bench"):
+            rec = registry.run_suite(name, out_dir=args.out_dir,
+                                     write=not args.no_json)
         note = "" if args.no_json else f" -> {rec.path}"
         print(f"# suite {name} done in {time.time() - t0:.1f}s"
               f" ({len(rec.results)} records){note}", file=sys.stderr)
+
+    if args.trace:
+        obs.export(args.trace)
+        print(f"# trace -> {args.trace}", file=sys.stderr)
     return 0
 
 

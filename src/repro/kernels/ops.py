@@ -57,6 +57,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import flash_attn, ref
 from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_mm_blocks,
                                    dyad_mm_blocks_two, dyad_mm_dgrad,
@@ -76,7 +77,9 @@ def _interpret() -> bool:
     """Single source of truth for the kernel execution mode — the autotuner
     and benchmarks reuse this so tuned tiles are measured the same way the
     serving and training hot paths run them."""
-    return not _backend_is_tpu()
+    interpret = not _backend_is_tpu()
+    obs.route_event("pallas_exec", "interpret" if interpret else "compiled")
+    return interpret
 
 
 def _use_pallas_bwd() -> bool:
@@ -86,10 +89,16 @@ def _use_pallas_bwd() -> bool:
     of the same dataflow (:func:`_bwd_direct`).  Checked at trace time."""
     forced = os.environ.get("REPRO_KERNEL_BWD", "").lower()
     if forced == "pallas":
-        return True
-    if forced == "xla":
-        return False
-    return _backend_is_tpu()
+        use = True
+    elif forced == "xla":
+        use = False
+    else:
+        use = _backend_is_tpu()
+    # trace-time decision, recorded so a silent fall-off from the Pallas
+    # kernels shows up in obs.route_counts() / the exported timeline
+    obs.route_event("kernel_bwd", "pallas" if use else "xla",
+                    forced=bool(forced))
+    return use
 
 
 def _ff_route() -> str:
@@ -99,7 +108,9 @@ def _ff_route() -> str:
     the hidden round-tripping through HBM).  ``REPRO_KERNEL_FF=fused|split``
     forces either; checked at trace time."""
     forced = os.environ.get("REPRO_KERNEL_FF", "").lower()
-    return forced if forced in ("fused", "split") else "fused"
+    route = forced if forced in ("fused", "split") else "fused"
+    obs.route_event("ff", route, forced=route == forced)
+    return route
 
 
 def attn_route() -> str:
@@ -110,9 +121,10 @@ def attn_route() -> str:
     hot path.  ``REPRO_KERNEL_ATTN=flash|xla`` forces either; checked at
     trace time."""
     forced = os.environ.get("REPRO_KERNEL_ATTN", "").lower()
-    if forced in ("flash", "xla"):
-        return forced
-    return "flash" if _backend_is_tpu() else "xla"
+    route = (forced if forced in ("flash", "xla")
+             else "flash" if _backend_is_tpu() else "xla")
+    obs.route_event("attn", route, forced=route == forced)
+    return route
 
 
 def _bwd_direct(x2d, w1, w2, g2d, variant: str):

@@ -28,7 +28,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import CheckpointManager
 from repro.models import model
 from repro.serve import ContinuousBatchingEngine, Engine
@@ -63,6 +63,18 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged mode: share full prompt-prefix pages "
                          "between requests (skips re-prefill)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record runtime spans (admission/prefill/decode/"
+                         "sync/retire) and export Chrome-trace JSON here — "
+                         "open in ui.perfetto.dev, diff two runs with "
+                         "python -m repro.perf.timeline")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final serving metrics snapshot (TTFT/"
+                         "ITL percentiles, tok/s, queue depth, page-pool "
+                         "occupancy, prefix hits) as JSON")
+    ap.add_argument("--report-every", type=float, default=None,
+                    metavar="SECONDS",
+                    help="continuous engine: periodic one-line stats report")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
@@ -71,6 +83,9 @@ def main():
                          "meaningful with a kernel-routed linear spec, "
                          "e.g. --linear dyad_it_4_kernel")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
@@ -91,7 +106,8 @@ def main():
             eos_id=args.eos_id, temperature=args.temperature, seed=args.seed,
             autotune=args.autotune, page_size=args.page_size,
             n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache,
+            report_every_s=args.report_every)
         lengths = [max(1, args.prompt_len - (i % 4)) for i in range(args.requests)]
         prompts = [
             jax.random.randint(jax.random.fold_in(key, i), (lengths[i],), 0,
@@ -108,6 +124,8 @@ def main():
         if engine.paged:
             print(f"[serve] paged: {engine.stats}")
         print({u: results[u][:8] for u in uids[:4]})
+        print(f"[serve] summary: {engine.format_summary()}")
+        _finish(args, engine.metrics)
         return
 
     engine = Engine(cfg, params, max_len=max_len, autotune=args.autotune)
@@ -126,6 +144,21 @@ def main():
     tps = args.batch * args.new_tokens / dt
     print(f"[serve] generated {out.shape} in {dt:.2f}s ({tps:.1f} tok/s)")
     print(out[:, :16])
+    print(f"[serve] summary: {obs.format_serving_line(engine.metrics)}")
+    _finish(args, engine.metrics)
+
+
+def _finish(args, metrics):
+    """Export the trace / metrics snapshot requested on the CLI."""
+    if args.metrics_json:
+        metrics.write_json(args.metrics_json)
+        print(f"[serve] metrics: {args.metrics_json}")
+    if args.trace:
+        t = obs.get_tracer()
+        n = len(t) if t else 0
+        obs.export(args.trace)
+        print(f"[serve] trace: {args.trace} ({n} events) — open in "
+              f"ui.perfetto.dev")
 
 
 if __name__ == "__main__":

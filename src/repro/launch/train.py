@@ -17,7 +17,7 @@ import argparse
 
 import jax
 
-from repro import configs
+from repro import configs, obs
 from repro.data import SyntheticLM
 from repro.optim import AdamW, Compressor, schedule
 from repro.train import Trainer, init_train_state, make_train_step
@@ -37,6 +37,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--compress", default="none",
                     choices=["none", "int8", "topk"])
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record train_step/checkpoint/autotune spans and "
+                         "export Chrome-trace JSON here (ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final training metrics snapshot as JSON")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
                     help="pre-tune Pallas kernel tiles (forward AND the "
@@ -46,6 +51,9 @@ def main():
                          "kernel-routed linear spec, e.g. "
                          "--linear dyad_it_4_kernel")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
@@ -83,6 +91,19 @@ def main():
     print(f"[train] done at step {trainer.step}: "
           f"loss={float(metrics['loss']):.4f} "
           f"stragglers={len(trainer.straggler_events)}")
+    snap = trainer.metrics.snapshot()
+    h = snap["histograms"].get("step_time_s")
+    if h:
+        print(f"[train] summary: steps={h['count']} "
+              f"step_ms p50={h['p50'] * 1e3:.1f} p99={h['p99'] * 1e3:.1f} "
+              f"tok/s={snap['gauges'].get('tokens_per_s', {}).get('value', 0):.0f} "
+              f"stragglers={snap['counters'].get('straggler_count', 0)}")
+    if args.metrics_json:
+        trainer.metrics.write_json(args.metrics_json)
+        print(f"[train] metrics: {args.metrics_json}")
+    if args.trace:
+        obs.export(args.trace)
+        print(f"[train] trace: {args.trace} — open in ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ Three cooperating parts (see docs/ARCHITECTURE.md §Performance subsystem):
   ``BENCH_<suite>.json`` at the repo root.
 * :mod:`repro.perf.compare` / ``python -m repro.perf.check`` — diff a fresh
   run against the last committed ``BENCH_*.json`` and fail on regression.
+* :mod:`repro.perf.timeline` — replay-diff of two ``--trace`` exports (or a
+  trace vs a BENCH document): attributes a wall-time regression to the
+  specific spans that got slower (``python -m repro.perf.timeline a b``).
 """
 from repro.perf.autotune import (autotune_dyad, candidate_blocks,
                                  candidate_blocks_ff, get_tuned_blocks,
@@ -18,6 +21,10 @@ from repro.perf.autotune import (autotune_dyad, candidate_blocks,
 from repro.perf.record import (BenchResult, Recorder, current_recorder,
                                hlo_metrics, recording)
 from repro.perf.registry import available_suites, register, run_suite
+
+# NOTE: repro.perf.timeline is intentionally NOT imported here — it is a
+# ``python -m`` entry point, and importing it from the package __init__
+# makes runpy warn about the module already being in sys.modules.
 
 __all__ = [
     "BenchResult", "Recorder", "current_recorder", "recording", "hlo_metrics",

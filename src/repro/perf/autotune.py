@@ -26,9 +26,11 @@ from __future__ import annotations
 
 import json
 import os
+import time
 import warnings
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro import obs
 from repro.perf.record import backend_name as _backend
 from repro.perf.record import time_us as _time_us
 
@@ -603,20 +605,43 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
 
 def _time_candidates(kernel, cands: List[Blocks], key: str, iters: int,
                      warmup: int) -> Tuple[Blocks, float]:
+    """Time every candidate and return the winner.
+
+    Long sweeps used to be completely silent (a deep-model ``--autotune``
+    looks like a hang): with ``REPRO_OBS_VERBOSE=1`` — or whenever the
+    tracer is enabled — each candidate prints a progress line, and every
+    measurement lands in the trace as an ``autotune_candidate`` span."""
     best: Optional[Blocks] = None
     best_us = float("inf")
-    for cand in cands:
-        try:
-            us = _time_us(lambda c=cand: kernel(**c),
-                          iters=iters, warmup=warmup)
-        except Exception as e:       # invalid tiling for this backend/shape
-            warnings.warn(f"repro.perf: candidate {cand} failed for "
-                          f"{key}: {e}")
-            continue
-        if us < best_us:
-            best, best_us = cand, us
+    n = len(cands)
+    chatty = obs.verbose()
+    t_sweep = time.perf_counter()
+    with obs.span("autotune_sweep", cat="autotune", key=key, candidates=n):
+        for i, cand in enumerate(cands):
+            with obs.span("autotune_candidate", cat="autotune", key=key,
+                          i=i, **cand) as sp:
+                try:
+                    us = _time_us(lambda c=cand: kernel(**c),
+                                  iters=iters, warmup=warmup)
+                except Exception as e:   # invalid tiling for backend/shape
+                    warnings.warn(f"repro.perf: candidate {cand} failed for "
+                                  f"{key}: {e}")
+                    if chatty:
+                        print(f"[autotune] {key}: {i + 1}/{n} {cand} FAILED "
+                              f"({type(e).__name__})", flush=True)
+                    continue
+                sp.set(us=round(us, 2))
+            if chatty:
+                print(f"[autotune] {key}: {i + 1}/{n} {cand} -> {us:.1f}us"
+                      f"{'  <- best' if us < best_us else ''}", flush=True)
+            if us < best_us:
+                best, best_us = cand, us
     if best is None:
         raise RuntimeError(f"autotune: every candidate failed for {key}")
+    if chatty:
+        print(f"[autotune] {key}: winner {best} {best_us:.1f}us "
+              f"({n} candidates in "
+              f"{time.perf_counter() - t_sweep:.2f}s)", flush=True)
     return best, best_us
 
 

@@ -12,6 +12,10 @@ plus a generous ``--tol`` to opt into gating.
     python benchmarks/run.py --suite ff_timing     # writes BENCH_ff_timing.json
     python -m repro.perf.check                     # gate vs committed baseline
     python -m repro.perf.check --suite smoke --tol 3.0
+    python -m repro.perf.check --json report.json  # machine-readable verdict
+                                                   # (per-cell rows +
+                                                   # regressed_cells for CI
+                                                   # annotations; '-'=stdout)
 """
 from __future__ import annotations
 
@@ -61,16 +65,29 @@ def committed_bench(rev: str, relpath: str, root: str) -> Optional[dict]:
 
 
 def check_file(path: str, *, rev: str, tol: float, min_us: float,
-               root: str, cross_backend: bool) -> int:
+               root: str, cross_backend: bool) -> dict:
+    """Gate one BENCH file; returns a JSON-ready report dict whose
+    ``"failed"`` key is the gate verdict for this file."""
     rel = os.path.relpath(path, root)
     current = load_bench(path)
     baseline = committed_bench(rev, rel, root)
+    report = {
+        "path": rel,
+        "suite": current.get("suite"),
+        "backend": current.get("backend"),
+        "git_sha": current.get("git_sha"),
+        "baseline_rev": rev,
+        "gated": False,
+        "failed": False,
+        "rows": [],
+    }
     print(f"\n== {rel} (suite={current.get('suite', '?')}, "
           f"backend={current.get('backend', '?')}, "
           f"sha={current.get('git_sha', '?')})")
     if baseline is None:
         print(f"   no baseline at {rev}: PASS (new trajectory)")
-        return 0
+        report["baseline"] = None
+        return report
 
     same_machine = (baseline.get("backend") == current.get("backend")
                     and baseline.get("host") == current.get("host"))
@@ -83,11 +100,26 @@ def check_file(path: str, *, rev: str, tol: float, min_us: float,
           f"(tol={tol:.0%}, baseline backend="
           f"{baseline.get('backend', '?')} host="
           f"{baseline.get('host', '?')})")
-    if not same_machine and not cross_backend:
+    report["baseline"] = {"backend": baseline.get("backend"),
+                          "host": baseline.get("host"),
+                          "git_sha": baseline.get("git_sha")}
+    report["summary"] = s
+    report["rows"] = [{
+        "name": r.name,
+        "base_us": r.base_us,
+        "cur_us": r.cur_us,
+        "ratio": r.ratio,
+        "status": r.status,
+        "regressed": r.regressed,
+    } for r in rows]
+    gated = same_machine or cross_backend
+    report["gated"] = gated
+    if not gated:
         print("   baseline is from a different machine/backend — wall-time "
               "gate skipped (pass --cross-backend to enforce)")
-        return 0
-    return 1 if s["regressed"] else 0
+        return report
+    report["failed"] = bool(s["regressed"])
+    return report
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -105,6 +137,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--cross-backend", action="store_true",
                    help="gate wall-times even when the baseline was "
                         "recorded on a different machine or backend")
+    p.add_argument("--json", default=None, metavar="PATH", dest="json_out",
+                   help="write a machine-readable report ('-' = stdout): "
+                        "per-cell base/cur/ratio/status rows so CI can "
+                        "annotate WHICH cell regressed without parsing "
+                        "the table")
     p.add_argument("paths", nargs="*",
                    help="explicit BENCH_*.json paths (default: repo root)")
     args = p.parse_args(argv)
@@ -122,12 +159,34 @@ def main(argv: Optional[List[str]] = None) -> int:
               "`python benchmarks/run.py --suite <name>` first")
         return 0
 
-    rc = 0
+    reports = []
     for path in paths:
-        rc |= check_file(path, rev=args.baseline_rev, tol=args.tol,
-                         min_us=args.min_us, root=root,
-                         cross_backend=args.cross_backend)
+        reports.append(check_file(path, rev=args.baseline_rev, tol=args.tol,
+                                  min_us=args.min_us, root=root,
+                                  cross_backend=args.cross_backend))
+    rc = 1 if any(r["failed"] for r in reports) else 0
     print("\nPERF GATE:", "FAIL" if rc else "PASS")
+    if args.json_out:
+        doc = {
+            "pass": not rc,
+            "tol": args.tol,
+            "min_us": args.min_us,
+            "cross_backend": args.cross_backend,
+            "files": reports,
+            "regressed_cells": [
+                {"suite": r["suite"], "name": row["name"],
+                 "base_us": row["base_us"], "cur_us": row["cur_us"],
+                 "ratio": row["ratio"]}
+                for r in reports for row in r["rows"] if row["regressed"]],
+        }
+        if args.json_out == "-":
+            json.dump(doc, sys.stdout, indent=1, sort_keys=True)
+            sys.stdout.write("\n")
+        else:
+            with open(args.json_out, "w") as f:
+                json.dump(doc, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"json report: {args.json_out}")
     return rc
 
 

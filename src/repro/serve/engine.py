@@ -50,12 +50,14 @@ import functools
 import hashlib
 import itertools
 import os
-from typing import Dict, List, Optional
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model
 from repro.models.config import ModelCfg
 
@@ -132,6 +134,7 @@ class Engine:
         self._step = jax.jit(make_serve_step(cfg))
         self._prefill = jax.jit(functools.partial(prefill, cfg))
         self._loops: Dict[tuple, callable] = {}
+        self.metrics = obs.MetricsRegistry()
 
     # -- compiled path ------------------------------------------------------
     def generate(self, prompt_tokens, num_new: int, *, temperature: float = 0.0,
@@ -154,15 +157,29 @@ class Engine:
                                    seq_len=S)                # prefill rows
             ensure_tuned_for_model(self.cfg, tokens=B,
                                    kv_len=self.max_len)      # decode rows
+        t_start = time.perf_counter()
         cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
-        logits, cache = self._prefill(self.params, cache, prompt_tokens,
-                                      frames)
-        tok = sample_token(logits, temperature, key)
+        with obs.span("prefill", cat="serve", batch=B, prompt_len=S):
+            logits, cache = self._prefill(self.params, cache, prompt_tokens,
+                                          frames)
+            tok = jax.block_until_ready(
+                sample_token(logits, temperature, key))
+        t_first = time.perf_counter()
+        # batch TTFT: prompt in -> first sampled token out (per generate)
+        self.metrics.histogram("ttft_s").observe(t_first - t_start)
         if num_new == 1:
+            self.metrics.counter("tokens_generated").inc(B)
+            self.metrics.counter("requests_finished").inc(B)
             return tok
         loop = self._decode_loop(num_new, temperature, key is not None)
-        toks, _ = loop(self.params, cache, tok,
-                       key if key is not None else jax.random.PRNGKey(0))
+        with obs.span("decode_loop", cat="serve", batch=B, num_new=num_new):
+            toks, _ = loop(self.params, cache, tok,
+                           key if key is not None else jax.random.PRNGKey(0))
+            toks = jax.block_until_ready(toks)
+        self.metrics.counter("tokens_generated").inc(B * num_new)
+        self.metrics.counter("requests_finished").inc(B)
+        self.metrics.histogram("itl_s").observe(
+            (time.perf_counter() - t_first) / (num_new - 1))
         return toks
 
     def _decode_loop(self, num_new: int, temperature: float, sampled: bool):
@@ -238,6 +255,10 @@ class Request:
     max_new: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    # telemetry timestamps (perf_counter seconds); 0.0 = not yet reached
+    t_submit: float = 0.0
+    t_first: float = 0.0        # first generated token (TTFT endpoint)
+    t_done: float = 0.0
 
 
 class SlotManager:
@@ -352,7 +373,9 @@ class ContinuousBatchingEngine:
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 report_every_s: Optional[float] = None,
+                 log_fn: Callable = print):
         if cfg.family in ("vlm", "encdec"):
             raise NotImplementedError(
                 "continuous batching currently serves token-only families")
@@ -378,6 +401,10 @@ class ContinuousBatchingEngine:
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id, self.temperature = eos_id, float(temperature)
         self.cache_dtype = cache_dtype
+        self.metrics = obs.MetricsRegistry()
+        self.report_every_s = report_every_s
+        self.log = log_fn
+        self._last_report = time.perf_counter()
         if self.paged:
             self.n_blocks = -(-max_len // page_size)      # blocks per slot
             if n_pages is None:
@@ -509,12 +536,19 @@ class ContinuousBatchingEngine:
         self._clock += 1
         key = jax.random.fold_in(self._key, self._clock)
         fn = self._chunk_fn(chunk)
-        tok, self.cache = fn(
-            self.params, self.cache,
-            jnp.asarray(req.prompt[pos:pos + chunk])[None, :],
-            jnp.asarray(self._bt[slot]), pos, key)
+        with obs.span("prefill_chunk", cat="serve", slot=slot, pos=pos,
+                      chunk=chunk, prompt_len=S):
+            tok, self.cache = fn(
+                self.params, self.cache,
+                jnp.asarray(req.prompt[pos:pos + chunk])[None, :],
+                jnp.asarray(self._bt[slot]), pos, key)
+            if obs.enabled():
+                # only the traced run pays the sync: untraced chunks stay
+                # async (the decode harvest blocks once per engine step)
+                tok = jax.block_until_ready(tok)
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += chunk
+        self.metrics.counter("prefill_tokens").inc(chunk)
         pos += chunk
         if pos >= S:
             del self._prefilling[slot]
@@ -582,19 +616,20 @@ class ContinuousBatchingEngine:
         Decoding lanes get their true table and length; free and
         mid-prefill lanes are pointed at scratch (page 0, index 0) so their
         padding-lane decode writes can never touch a live page."""
-        bt = self._bt.copy()
-        idx = self.slots.lengths.astype(np.int32)
-        for s in range(self.n_slots):
-            if s not in self.slots.active or s in self._prefilling:
-                bt[s] = 0
-                idx[s] = 0
-        n_layers = self.cfg.n_layers
-        self.cache = dict(self.cache)
-        self.cache["kv"] = dict(self.cache["kv"])
-        self.cache["kv"]["block_table"] = jnp.asarray(
-            np.broadcast_to(bt[None], (n_layers,) + bt.shape))
-        self.cache["kv"]["idx"] = jnp.asarray(
-            np.broadcast_to(idx[None], (n_layers,) + idx.shape))
+        with obs.span("sync_control", cat="serve"):
+            bt = self._bt.copy()
+            idx = self.slots.lengths.astype(np.int32)
+            for s in range(self.n_slots):
+                if s not in self.slots.active or s in self._prefilling:
+                    bt[s] = 0
+                    idx[s] = 0
+            n_layers = self.cfg.n_layers
+            self.cache = dict(self.cache)
+            self.cache["kv"] = dict(self.cache["kv"])
+            self.cache["kv"]["block_table"] = jnp.asarray(
+                np.broadcast_to(bt[None], (n_layers,) + bt.shape))
+            self.cache["kv"]["idx"] = jnp.asarray(
+                np.broadcast_to(idx[None], (n_layers,) + idx.shape))
 
     def _admit_paged(self) -> None:
         """Admit queued requests while a slot AND enough pages are free.
@@ -613,20 +648,27 @@ class ContinuousBatchingEngine:
                 return          # head-of-line blocking keeps arrival order
             self.queue.popleft()
             slot = self.slots.alloc(req, S)
-            for pid in shared:
-                self.pages.retain(pid)
-            self._bt[slot, :m] = shared
-            for i in range(m, nblk):
-                self._bt[slot, i] = self.pages.alloc()
-            self._nblk[slot] = nblk
-            if m:
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_pages_shared"] += m
-            self._prefilling[slot] = m * self.page_size
-            if not self.prefill_chunk:
-                # unchunked: the whole remaining prompt is one chunk, so
-                # admission completes the prefill exactly like dense mode
-                self._advance_prefill(slot)
+            with obs.span("admit", cat="serve", uid=req.uid, slot=slot,
+                          pages=nblk, prefix_pages=m,
+                          queued=len(self.queue)):
+                for pid in shared:
+                    self.pages.retain(pid)
+                self._bt[slot, :m] = shared
+                for i in range(m, nblk):
+                    self._bt[slot, i] = self.pages.alloc()
+                self._nblk[slot] = nblk
+                if m:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_pages_shared"] += m
+                    self.metrics.counter("prefix_hits").inc()
+                    self.metrics.counter("prefix_tokens_skipped").inc(
+                        m * self.page_size)
+                self._update_occupancy()
+                self._prefilling[slot] = m * self.page_size
+                if not self.prefill_chunk:
+                    # unchunked: the whole remaining prompt is one chunk, so
+                    # admission completes the prefill exactly like dense mode
+                    self._advance_prefill(slot)
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, prompt, max_new: int) -> int:
@@ -634,20 +676,30 @@ class ContinuousBatchingEngine:
         Returns the request uid (key into :meth:`run`'s result)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new - 1 > self.max_len:
+            self.metrics.counter("admission_rejects").inc()
+            obs.instant("admission_reject", cat="serve", reason="max_len",
+                        prompt_len=int(prompt.size), max_new=max_new)
             raise ValueError(
                 f"prompt {prompt.size} + {max_new} new tokens exceeds "
                 f"max_len {self.max_len}")
         if max_new < 1:
+            self.metrics.counter("admission_rejects").inc()
             raise ValueError("max_new must be >= 1")
         if self.paged:
             need = max(1, -(-(prompt.size + max_new - 1) // self.page_size))
             if need > self.pages.n_pages - 1:
+                self.metrics.counter("admission_rejects").inc()
+                obs.instant("admission_reject", cat="serve",
+                            reason="never_fits", pages_needed=need)
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.pages.n_pages - 1}")
-        req = Request(uid=next(self._uid), prompt=prompt, max_new=max_new)
+        req = Request(uid=next(self._uid), prompt=prompt, max_new=max_new,
+                      t_submit=time.perf_counter())
         self.queue.append(req)
+        self.metrics.counter("requests_submitted").inc()
         self._admit()
+        self._update_occupancy()
         return req.uid
 
     def _admit(self) -> None:
@@ -658,25 +710,43 @@ class ContinuousBatchingEngine:
         while self.queue and self.slots.free_slots:
             req = self.queue.popleft()
             slot = self.slots.alloc(req, len(req.prompt))
-            self._clock += 1
-            key = jax.random.fold_in(self._key, self._clock)
-            fn = self._prefill_one(len(req.prompt))
-            tok0, cache1 = fn(self.params, jnp.asarray(req.prompt)[None, :],
-                              key)
-            self.cache = self._write_slot(self.cache, cache1, slot)
-            self.tokens = self.tokens.at[slot].set(tok0[0])
-            self._emit(req, int(tok0[0, 0]))
+            with obs.span("admit", cat="serve", uid=req.uid, slot=slot,
+                          queued=len(self.queue)):
+                self._clock += 1
+                key = jax.random.fold_in(self._key, self._clock)
+                fn = self._prefill_one(len(req.prompt))
+                with obs.span("prefill", cat="serve", slot=slot,
+                              prompt_len=len(req.prompt)):
+                    tok0, cache1 = fn(self.params,
+                                      jnp.asarray(req.prompt)[None, :], key)
+                    self.cache = self._write_slot(self.cache, cache1, slot)
+                    tok0 = jax.block_until_ready(tok0)
+                self.tokens = self.tokens.at[slot].set(tok0[0])
+                self._emit(req, int(tok0[0, 0]))
 
     def _emit(self, req: Request, token: int) -> None:
         req.tokens.append(token)
+        now = time.perf_counter()
+        if len(req.tokens) == 1:
+            req.t_first = now
+            self.metrics.histogram("ttft_s").observe(now - req.t_submit)
+        self.metrics.counter("tokens_generated").inc()
         done = (self.eos_id is not None and token == self.eos_id) \
             or len(req.tokens) >= req.max_new \
             or self.slots.lengths[req.slot] >= self.max_len  # cache row full
         if done:
-            if self.paged:
-                self._release_slot_pages(req.slot)
-            self.slots.release(req.slot)
-            self.finished.append(req)
+            with obs.span("retire", cat="serve", uid=req.uid, slot=req.slot,
+                          n_tokens=len(req.tokens)):
+                req.t_done = now
+                if len(req.tokens) > 1:
+                    self.metrics.histogram("itl_s").observe(
+                        (now - req.t_first) / (len(req.tokens) - 1))
+                self.metrics.counter("requests_finished").inc()
+                if self.paged:
+                    self._release_slot_pages(req.slot)
+                    self._update_occupancy()
+                self.slots.release(req.slot)
+                self.finished.append(req)
 
     def step(self) -> List[Request]:
         """One padded-batch decode step; returns requests finished this step.
@@ -693,26 +763,62 @@ class ContinuousBatchingEngine:
                     if not (self.paged and s in self._prefilling)]
         if not decoding:
             self._admit()
+            self._maybe_report()
             return self.finished[before:]
         self._clock += 1
         key = jax.random.fold_in(self._key, self._clock)
         if self.paged:
             self._sync_control()
-        self.tokens, self.cache = self._batch_step(
-            self.params, self.cache, self.tokens, key)
-        emitted = np.asarray(self.tokens[:, 0])
+        t0 = time.perf_counter()
+        with obs.span("decode_step", cat="serve", batch=len(decoding)):
+            self.tokens, self.cache = self._batch_step(
+                self.params, self.cache, self.tokens, key)
+            emitted = np.asarray(self.tokens[:, 0])   # blocks on the step
+        self.metrics.histogram("decode_step_s").observe(
+            time.perf_counter() - t0)
         for slot in decoding:
             req = self.slots.active[slot]
             self.slots.lengths[slot] += 1
             self._emit(req, int(emitted[slot]))
         self._admit()
+        self._update_occupancy()
+        self._maybe_report()
         return self.finished[before:]
+
+    # -- telemetry ----------------------------------------------------------
+    def _update_occupancy(self) -> None:
+        """Refresh the load gauges (queue depth, active slots, page-pool
+        occupancy) — called wherever they can change, so their high-water
+        marks are exact."""
+        m = self.metrics
+        m.gauge("queue_depth").set(len(self.queue))
+        m.gauge("active_slots").set(len(self.slots.active))
+        if self.paged:
+            m.gauge("page_pool_used").set(
+                self.pages.n_pages - 1 - self.pages.free_pages)
+
+    def _maybe_report(self) -> None:
+        if self.report_every_s is None:
+            return
+        now = time.perf_counter()
+        if now - self._last_report >= self.report_every_s:
+            self._last_report = now
+            self.log(f"[serve] {obs.format_serving_line(self.metrics)}")
+
+    def metrics_summary(self) -> dict:
+        """JSON-ready snapshot of the serving metric set (the payload of
+        ``launch/serve.py --metrics-json``)."""
+        return self.metrics.snapshot()
+
+    def format_summary(self) -> str:
+        return obs.format_serving_line(self.metrics)
 
     def run(self) -> Dict[int, List[int]]:
         """Step until every queued/active request finishes.
         Returns {uid: generated token list}."""
         while self.slots.active or self.queue:
             self.step()
+        self._update_occupancy()
         out = {r.uid: r.tokens for r in self.finished}
         self.finished = []
         return out

@@ -9,7 +9,12 @@ Production behaviors, all exercised by tests on this container:
 * **straggler watchdog** — steps slower than ``straggler_factor`` x the running
   median are recorded; the mitigation policy (re-dispatch to spares, skip) is
   pluggable via ``on_straggler``;
-* **async checkpointing** — serialization never blocks the step loop.
+* **async checkpointing** — serialization never blocks the step loop;
+* **telemetry** — every step runs under an ``obs.span`` (``--trace`` on the
+  launcher exports the timeline) and feeds a :class:`repro.obs.MetricsRegistry`
+  (``step_time_s`` histogram, ``tokens_per_s`` / ``loss`` gauges,
+  ``straggler_count``); the periodic log line carries loss, tokens/s and the
+  running-median step time the watchdog already maintains.
 """
 from __future__ import annotations
 
@@ -20,7 +25,19 @@ from typing import Callable, Optional
 
 import jax
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
+
+
+def _batch_tokens(batch) -> int:
+    """Tokens in one batch: the ``tokens`` leaf when present (the synthetic
+    LM pipeline contract), else the largest leaf's element count."""
+    if isinstance(batch, dict) and "tokens" in batch:
+        t = batch["tokens"]
+        return int(t.size) if hasattr(t, "size") else 0
+    sizes = [int(x.size) for x in jax.tree.leaves(batch)
+             if hasattr(x, "size")]
+    return max(sizes) if sizes else 0
 
 
 class Trainer:
@@ -50,6 +67,8 @@ class Trainer:
         self.straggler_events = []
         self._preempted = False
         self._step_times = []
+        self._median = 0.0            # running median the watchdog computes
+        self.metrics = obs.MetricsRegistry()
 
     # -- fault tolerance ------------------------------------------------------
     def install_preemption_handler(self, signals=(signal.SIGTERM,)):
@@ -62,15 +81,21 @@ class Trainer:
 
     def maybe_resume(self):
         if self.ckpt and self.ckpt.latest_step() is not None:
-            self.step, self.state = self.ckpt.restore(self.state)
+            with obs.span("resume", cat="train"):
+                self.step, self.state = self.ckpt.restore(self.state)
             self.log(f"[trainer] resumed from step {self.step}")
 
     def _watch_straggler(self, dt: float):
         self._step_times.append(dt)
         if len(self._step_times) >= 8:
             med = statistics.median(self._step_times[-64:])
+            self._median = med
             if dt > self.straggler_factor * med:
                 self.straggler_events.append((self.step, dt, med))
+                self.metrics.counter("straggler_count").inc()
+                obs.instant("straggler", cat="train", step=self.step,
+                            dt_ms=round(dt * 1e3, 2),
+                            median_ms=round(med * 1e3, 2))
                 self.log(f"[trainer] straggler at step {self.step}: "
                          f"{dt * 1e3:.1f}ms vs median {med * 1e3:.1f}ms")
                 if self.on_straggler:
@@ -80,20 +105,37 @@ class Trainer:
     def run(self, num_steps: int):
         self.maybe_resume()
         metrics = {}
+        m = self.metrics
         while self.step < num_steps and not self._preempted:
             batch = self.data.batch(self.step)
+            n_tok = _batch_tokens(batch)
             t0 = time.perf_counter()
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            self._watch_straggler(time.perf_counter() - t0)
+            with obs.span("train_step", cat="train", step=self.step,
+                          tokens=n_tok):
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._watch_straggler(dt)
+            m.histogram("step_time_s").observe(dt)
+            m.counter("tokens_trained").inc(n_tok)
+            m.gauge("tokens_per_s").set(n_tok / max(dt, 1e-9))
             self.step += 1
             if self.step % self.log_every == 0:
-                self.log(f"[trainer] step {self.step} "
-                         f"loss={float(metrics['loss']):.4f} "
-                         f"gnorm={float(metrics['grad_norm']):.3f}")
+                loss = float(metrics["loss"])
+                m.gauge("loss").set(loss)
+                # median from the watchdog window (not the histogram): both
+                # log line and straggler verdicts quote the SAME number
+                med = self._median or statistics.median(self._step_times)
+                self.log(f"[trainer] step {self.step} loss={loss:.4f} "
+                         f"gnorm={float(metrics['grad_norm']):.3f} "
+                         f"tok/s={n_tok / max(dt, 1e-9):.0f} "
+                         f"step_ms_med={med * 1e3:.1f}")
             if self.ckpt and self.step % self.ckpt_every == 0:
-                self.ckpt.save(self.step, self.state)
+                with obs.span("checkpoint", cat="train", step=self.step):
+                    self.ckpt.save(self.step, self.state)
         if self.ckpt:
-            self.ckpt.save(self.step, self.state, blocking=True)
-            self.ckpt.wait()
+            with obs.span("checkpoint", cat="train", step=self.step,
+                          final=True):
+                self.ckpt.save(self.step, self.state, blocking=True)
+                self.ckpt.wait()
         return self.state, metrics
