@@ -53,8 +53,8 @@ def main(argv=None) -> int:
     from benchmarks import (bench_attention, bench_ff_fused,  # noqa: F401
                             bench_ff_timing, bench_memory, bench_mnist,
                             bench_quality, bench_serve_throughput,
-                            bench_smoke, bench_train_step,
-                            bench_width_sweep)
+                            bench_smoke, bench_tp_scaling,
+                            bench_train_step, bench_width_sweep)
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite", action="append", default=None,

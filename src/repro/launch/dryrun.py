@@ -26,9 +26,46 @@ from repro.sharding import (batch_shardings, cache_shardings,  # noqa: E402
 from repro.sharding import ctx as shard_ctx  # noqa: E402
 from repro.train import init_train_state, make_train_step  # noqa: E402
 
-# archs big enough to need ZeRO/FSDP over the data axis
+# archs big enough to need ZeRO/FSDP over the data axis.  NOTE: membership
+# is sized on WEIGHT memory, which the ff route does not change; activation
+# headroom DOES differ per route (the fused TP megakernel keeps the hidden
+# in VMEM, the einsum fallback round-trips it through HBM) — that per-shard
+# accounting is reported per cell via ``ff_route_accounting`` below rather
+# than baked into this set.
 FSDP_ARCHS = {"llama3_405b", "llama4_maverick_400b_a17b", "qwen2_5_32b",
               "phi3_medium_14b"}
+
+
+def ff_route_accounting(cfg, shape, sizes, rules) -> dict:
+    """Per-device ff-hidden HBM accounting for the route this config
+    dispatches under the mesh.  The pre-TP report assumed the FALLBACK
+    memory profile for every cell: ``2 * tokens * d_ff * dtype_bytes``
+    per step of hidden write+read traffic.  The fused TP route
+    (``kernels.tp.dyad_ff_tp``) deletes that term — the per-shard hidden
+    lives only in VMEM accumulator tiles — so cells that dispatch it
+    report ``ff_hidden_bytes_est = 0`` and the fallback estimate shrinks
+    by the dp * tp sharding of the hidden."""
+    from repro.kernels import tp as ktp
+    from repro.perf.autotune import model_ff_fused_shape
+
+    tp = int(sizes.get(rules.model, 1))
+    dp = 1
+    for a in rules.dp:
+        dp *= int(sizes.get(a, 1))
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    dtype_bytes = 2 if getattr(cfg, "compute_dtype", "") == "bfloat16" else 4
+    ff = model_ff_fused_shape(cfg)
+    fused = ff is not None and (tp == 1
+                                or (ff[2] % tp == 0 and ktp.tp_enabled()))
+    if fused:
+        route = "fused_kernel_tp" if tp > 1 else "fused_kernel"
+        hidden = 0
+    else:
+        route = "block_einsum"
+        hidden = (2 * tokens * cfg.d_ff * dtype_bytes * cfg.n_layers
+                  // max(dp * tp, 1))
+    return {"ff_route": route, "ff_hidden_bytes_est": int(hidden)}
 
 
 def active_param_count(cfg, params_specs) -> int:
@@ -87,6 +124,7 @@ def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
             "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
             "fsdp": use_fsdp, "kind": shape.kind}
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    meta.update(ff_route_accounting(cfg, shape, sizes, rules))
     dp_size = 1
     for a in rules.dp:
         dp_size *= sizes[a]

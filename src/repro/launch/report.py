@@ -29,8 +29,8 @@ def _load(dryrun_dir: str, mesh: str):
 
 def variants_table(cells, triples):
     """Side-by-side §Perf points: (arch, shape, [(label, linear, tag), ...])."""
-    rows = ["| cell | variant | peak GiB/dev | compute s | memory s | collective s | bound s | useful |",
-            "|---|---|---|---|---|---|---|---|"]
+    rows = ["| cell | variant | peak GiB/dev | ff hidden GiB/dev | compute s | memory s | collective s | bound s | useful |",
+            "|---|---|---|---|---|---|---|---|---|"]
     for arch, shape, variants in triples:
         for label, linear, tag in variants:
             r = cells.get((arch, shape, linear, tag))
@@ -38,8 +38,13 @@ def variants_table(cells, triples):
                 continue
             bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
             peak = r["memory_analysis"].get("peak_bytes_est", 0) / 2**30
+            # per-shard ff-hidden traffic from dryrun.ff_route_accounting:
+            # 0 for the fused route (hidden stays in VMEM), absent in JSONs
+            # predating the TP kernels
+            hb = r.get("ff_hidden_bytes_est")
+            hidden = "n/a" if hb is None else f"{hb / 2**30:.2f}"
             rows.append(
-                f"| {arch}/{shape} | {label} | {peak:.1f} | "
+                f"| {arch}/{shape} | {label} | {peak:.1f} | {hidden} | "
                 f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
                 f"{r['collective_s']:.3f} | {bound:.3f} | "
                 f"{r['useful_flops_ratio']:.2f} |")
@@ -135,6 +140,8 @@ def main():
             ("DYAD-IT(4) faithful", "dyad_it_4", "base"),
             ("DYAD-IT(4) fused ff [beyond-paper]", "dyad_it_4_fused", "base"),
             ("DYAD-IT(8) fused ff", "dyad_it_8_fused", "base"),
+            ("DYAD-IT(4) ff megakernel [TP]", "dyad_it_4_kernel_ffused",
+             "base"),
         ]),
         ("llama4_maverick_400b_a17b", "train_4k", [
             ("DENSE (paper baseline)", "dense", "base"),

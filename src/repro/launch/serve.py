@@ -23,6 +23,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -75,6 +76,16 @@ def main():
     ap.add_argument("--report-every", type=float, default=None,
                     metavar="SECONDS",
                     help="continuous engine: periodic one-line stats report")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="shard the model axis over this many devices: "
+                         "dispatches the shard_map TP kernels "
+                         "(kernels/tp.py) when d_ff / KV heads divide, "
+                         "einsum fallback (visible in --metrics-json "
+                         "routes) otherwise.  On CPU force devices first: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel axis size (dp * tp must equal the "
+                         "visible device count when either exceeds 1)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
@@ -87,6 +98,22 @@ def main():
     if args.trace:
         obs.enable()
 
+    # engines capture the ambient mesh at construction (per-shard autotune
+    # keys) and the layer dispatch consults it at trace time, so the whole
+    # run sits inside one activation-sharding context
+    mesh_ctx = contextlib.nullcontext()
+    if args.tp > 1 or args.dp > 1:
+        from repro.launch.mesh import make_test_mesh
+        from repro.sharding import ctx as shard_ctx
+        mesh = make_test_mesh((args.dp, args.tp))
+        mesh_ctx = shard_ctx.activation_sharding(mesh, dp=("data",),
+                                                 model="model")
+        print(f"[serve] mesh: data={args.dp} model={args.tp}")
+    with mesh_ctx:
+        _run(args)
+
+
+def _run(args):
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
     key = jax.random.PRNGKey(args.seed)
@@ -151,7 +178,9 @@ def main():
 def _finish(args, metrics):
     """Export the trace / metrics snapshot requested on the CLI."""
     if args.metrics_json:
-        metrics.write_json(args.metrics_json)
+        # route-dispatch counters ride along: ff_tp/attn_tp tp_fused vs
+        # tp_fallback make a silently lost kernel route visible here.
+        metrics.write_json(args.metrics_json, routes=obs.routes_snapshot())
         print(f"[serve] metrics: {args.metrics_json}")
     if args.trace:
         t = obs.get_tracer()

@@ -7,13 +7,16 @@ The Q/K/V/O projections are created through the linear factory with
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import factory
 from repro.kernels import ops as kops
+from repro.kernels import tp as ktp
 from repro.layers import norms
 from repro.layers.rotary import apply_rope
 from repro.sharding import ctx as shard_ctx
@@ -233,10 +236,13 @@ def attention(
     shape supports it: the no-cache forward and the cache prefill hit the
     fused prefill grid (the S < L case attends the post-write cache, so
     warm-cache continuation prefill is exact), the S=1 decode step hits
-    the ring-cache decode kernel.  Cross-attention, active tensor-parallel
-    sharding contexts, and per-batch (2-D) position vectors fall back to
-    the chunked/naive einsum paths below (which also remain the off-TPU
-    route and the correctness oracles).  CONTRACT: the no-cache flash path
+    the ring-cache decode kernel.  Under a tensor-parallel sharding
+    context the same kernels run per-shard over the KV-head axis via
+    shard_map (:mod:`repro.kernels.tp`) when the heads divide the model
+    axis.  Cross-attention, non-divisible TP head counts (or
+    ``REPRO_KERNEL_TP=off``), and per-batch (2-D) position vectors fall
+    back to the chunked/naive einsum paths below (which also remain the
+    off-TPU route and the correctness oracles).  CONTRACT: the no-cache flash path
     assumes 1-D ``positions`` are contiguous (``positions[0] + arange(S)``
     — true for every model dispatch site; contiguity of a traced vector
     cannot be checked at trace time); the S >= L windowed-ring prefill
@@ -271,12 +277,29 @@ def attention(
         q = apply_rope(q, rp, rope_theta)
         k = apply_rope(k, rp, rope_theta)
 
-    # flash routing decision (trace time).  The kernels are single-device
-    # dataflows: an active TP sharding context keeps the einsum paths,
-    # whose score layout carries the GSPMD constraints.
-    use_flash = (flash and kv_input is None
-                 and shard_ctx.current() is None
-                 and kops.attn_route() == "flash")
+    # flash routing decision (trace time).  Under an active sharding
+    # context the flash kernels run PER-SHARD over the KV-head axis via
+    # shard_map (kernels.tp) when the heads divide the model axis — GQA
+    # groups stay whole per shard, the scalar-prefetched index/block-table
+    # machinery rides along per device.  Non-divisible heads (or
+    # REPRO_KERNEL_TP=off) keep the einsum paths, whose score layout
+    # carries the GSPMD constraints; both outcomes are counted under the
+    # ``attn_tp`` route so silent kernel loss shows up in --metrics-json.
+    route = kops.attn_route() if flash and kv_input is None else None
+    actx = shard_ctx.current()
+    tp_ok = True
+    if route == "flash" and actx is not None:
+        tp_ok = ktp.attn_tp_ready(K, actx)
+        obs.route_event("attn_tp", "tp_fused" if tp_ok else "tp_fallback",
+                        tp=actx.axis_size(actx.model))
+    use_flash = route == "flash" and tp_ok
+    if actx is not None and actx.axis_size(actx.model) > 1:
+        fa = functools.partial(ktp.flash_attention_tp, ctx=actx)
+        fd = functools.partial(ktp.flash_decode_tp, ctx=actx)
+        fdp = functools.partial(ktp.flash_decode_paged_tp, ctx=actx)
+    else:
+        fa, fd, fdp = (kops.flash_attention, kops.flash_decode,
+                       kops.flash_decode_paged)
     k_inflight = v_inflight = None
 
     new_cache = None
@@ -389,19 +412,17 @@ def attention(
     if use_flash and paged and kv_input is None and S == 1:
         # paged decode: K/V tiles are gathered through the scalar-prefetched
         # block table in-kernel — the dense per-slot view is never built.
-        o = kops.flash_decode_paged(qg, new_cache["pages_k"],
-                                    new_cache["pages_v"], bt, idx,
-                                    window=window)
+        o = fdp(qg, new_cache["pages_k"], new_cache["pages_v"], bt, idx,
+                window=window)
     elif use_flash and cache is not None and kv_input is None and S == 1:
         # ring-cache decode: per-slot key positions derive from the
         # scalar-prefetched write index inside the kernel.
-        o = kops.flash_decode(qg, k, v, idx, window=window)
+        o = fd(qg, k, v, idx, window=window)
     elif use_flash and cache is None and qpos.ndim == 1:
         # plain forward (training / encoder): contiguous positions
         # qpos[0] + arange(S) against keys at arange(T).
-        o = kops.flash_attention(
-            qg, k, v, qpos[0], 0, causal=causal, window=window,
-            use_kernel_bwd=getattr(lin_cfg, "use_kernel_bwd", True))
+        o = fa(qg, k, v, qpos[0], 0, causal=causal, window=window,
+               use_kernel_bwd=getattr(lin_cfg, "use_kernel_bwd", True))
     elif use_flash and cache is not None and S > 1 and causal:
         if attend_cache:
             # S < L linear cache prefill: attend the POST-WRITE cache.
@@ -410,14 +431,13 @@ def attention(
             # keys cached before ``idx`` included (warm-cache continuation
             # prefill), tail slots j > idx+s excluded by the causal mask,
             # out-of-band key tiles band-skipped from the prefetched idx.
-            o = kops.flash_attention(qg, k, v, idx, 0, causal=True,
-                                     window=window)
+            o = fa(qg, k, v, idx, 0, causal=True, window=window)
         else:
             # S >= L windowed-ring prefill: the cache cannot hold the
             # prompt; attend the in-flight roped K/V at idx + arange(S) —
             # the same fresh-stream contract the einsum branch documents.
-            o = kops.flash_attention(qg, k_inflight, v_inflight, idx, idx,
-                                     causal=True, window=window)
+            o = fa(qg, k_inflight, v_inflight, idx, idx, causal=True,
+                   window=window)
     elif (chunk is not None and cache is None and kv_input is None
             and S > chunk and S % chunk == 0 and qpos.ndim == 1):
         o = _q_block_sdpa(qg, k, v, qpos, kpos, causal, window, chunk)

@@ -17,9 +17,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import dyad as dyad_lib
 from repro.core import factory
 from repro.kernels import ops as kops
+from repro.kernels import tp as ktp
 from repro.kernels.ref import ACTS as _ACTS
 from repro.sharding import ctx as shard_ctx
 
@@ -48,23 +50,40 @@ def init_mlp(key, d_model: int, d_ff: int, lin_cfg: factory.LinearCfg, *,
     }
 
 
-def _ff_kernel_ready(params, lin_cfg: factory.LinearCfg, act: str) -> bool:
-    """Route this ff module through the one-grid Pallas megakernel?  Needs
-    the config opt-in, a supported epilogue activation, bias-free DYAD
-    params on every projection (the kernel has no bias epilogue; the
-    default transformer ff is bias-free), and NO active tensor-parallel
-    sharding context — the megakernel is a single-device dataflow, and a
-    TP hidden needs the ``fuse_mlp`` path's block-layout sharding
-    constraint (skipping it silently costs an all-gather per layer)."""
-    if not (lin_cfg.fuse_ff_kernel and lin_cfg.use_kernel):
-        return False
+def _ff_module_ok(params, act: str) -> bool:
+    """Bias-free DYAD ff params with a supported epilogue activation — the
+    shape of module the megakernel (and its einsum twin
+    ``_fused_dyad_mlp``) computes."""
     if act not in _FF_KERNEL_ACTS:
-        return False
-    if shard_ctx.current() is not None:
         return False
     need = ("gate", "up", "down") if act == "swiglu" else ("up", "down")
     return all("w1" in params.get(k, {}) and "b" not in params[k]
                for k in need)
+
+
+def _ff_kernel_ready(params, lin_cfg: factory.LinearCfg, act: str) -> bool:
+    """Route this ff module through the one-grid Pallas megakernel?  Needs
+    the config opt-in, a supported epilogue activation, and bias-free DYAD
+    params on every projection (the kernel has no bias epilogue; the
+    default transformer ff is bias-free).  Under an active sharding
+    context the megakernel runs PER-SHARD via ``kernels.tp.dyad_ff_tp``
+    (shard_map over the model axis, hidden split like
+    ``constrain_ff_hidden``) when the hidden divides the axis; otherwise —
+    or with ``REPRO_KERNEL_TP=off`` — the ``fuse_mlp`` einsum path keeps
+    the block-layout sharding constraint.  Both TP outcomes are counted
+    (``ff_tp``: ``tp_fused`` vs ``tp_fallback``) so a config that silently
+    loses the kernel is visible in ``--metrics-json``."""
+    if not (lin_cfg.fuse_ff_kernel and lin_cfg.use_kernel):
+        return False
+    if not _ff_module_ok(params, act):
+        return False
+    ctx = shard_ctx.current()
+    if ctx is None:
+        return True
+    ready = ktp.ff_tp_ready(params, ctx)
+    obs.route_event("ff_tp", "tp_fused" if ready else "tp_fallback",
+                    tp=ctx.axis_size(ctx.model))
+    return ready
 
 
 def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
@@ -87,11 +106,21 @@ def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
 def apply_mlp(params, x, lin_cfg: factory.LinearCfg, *, act: str = "swiglu"):
     if _ff_kernel_ready(params, lin_cfg, act):
         # whole ff module in one Pallas grid; hidden never leaves VMEM.
-        # Single-device dataflow — under tensor parallelism use fuse_mlp,
-        # whose block-layout hidden carries the sharding constraint.
+        # Under tensor parallelism the same grid runs per-shard inside
+        # shard_map with an overlapped psum_scatter reduce (kernels.tp).
+        ctx = shard_ctx.current()
+        if ctx is not None and ctx.axis_size(ctx.model) > 1:
+            return ktp.dyad_ff_tp(params, x, act=act,
+                                  use_kernel_bwd=lin_cfg.use_kernel_bwd,
+                                  ctx=ctx)
         return kops.dyad_ff(params, x, act=act,
                             use_kernel_bwd=lin_cfg.use_kernel_bwd)
-    if lin_cfg.fuse_mlp and "w1" in params.get("down", {}):
+    # fuse_ff_kernel modules that can't run the kernel here (TP fallback,
+    # REPRO_KERNEL_TP=off) drop to the SAME up=IT/act/down=OT dataflow as
+    # einsums — the megakernel's function, not the plain all-IT chain.
+    use_blocks = (lin_cfg.fuse_mlp
+                  or (lin_cfg.fuse_ff_kernel and _ff_module_ok(params, act)))
+    if use_blocks and "w1" in params.get("down", {}):
         return _fused_dyad_mlp(params, x, lin_cfg, act)
     if act == "swiglu":
         g = factory.apply(params["gate"], x, lin_cfg, site="ff")

@@ -51,10 +51,19 @@ def reset_route_counts() -> None:
     _ROUTE_COUNTS.clear()
 
 
+def routes_snapshot() -> Dict[str, int]:
+    """JSON-ready view of the dispatch counters (``{"op:route": n}``) —
+    merged into ``--metrics-json`` exports so a config that silently loses
+    a kernel route (e.g. ``ff_tp:tp_fallback`` under TP) is visible in the
+    same artifact as the latency percentiles."""
+    return {f"{op}:{route}": n
+            for (op, route), n in sorted(_ROUTE_COUNTS.items())}
+
+
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "format_serving_line", "format_training_line",
     "Tracer", "enable", "disable", "enabled", "export", "get_tracer",
     "instant", "span", "verbose",
-    "route_event", "route_counts", "reset_route_counts",
+    "route_event", "route_counts", "reset_route_counts", "routes_snapshot",
 ]

@@ -134,9 +134,13 @@ class MetricsRegistry:
                            for k, h in sorted(self._hists.items())},
         }
 
-    def write_json(self, path: str) -> str:
+    def write_json(self, path: str, **extra) -> str:
+        """Dump the snapshot as JSON; ``extra`` top-level sections (e.g.
+        ``routes=obs.routes_snapshot()``) ride along in the same artifact."""
+        doc = self.snapshot()
+        doc.update(extra)
         with open(path, "w") as f:
-            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+            json.dump(doc, f, indent=1, sort_keys=True)
             f.write("\n")
         return path
 

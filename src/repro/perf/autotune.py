@@ -24,6 +24,8 @@ insensitive to B within a bucket (the b-axis tile clamps to the bucket).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import json
 import os
 import time
@@ -72,20 +74,51 @@ def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
 
 
+# Tensor-parallel shard tag.  kernels/tp.py sets this around shard_map
+# invocations (the body traces eagerly inside the outer jit trace, so
+# trace-time ``get_tuned_blocks`` lookups in the per-shard kernels see it),
+# and ``ensure_tuned_for_model`` sets it while sweeping per-shard shapes.
+# Keys gain a ``|tp{N}`` suffix only for N > 1: a per-shard shape that
+# happens to equal a single-device global shape (e.g. d_ff/tp at tp=2 vs a
+# half-width model at tp=1) must not collide — their VMEM/ICI trade-offs
+# differ — while every committed tp=1 cache entry stays valid unchanged.
+_TP: "contextvars.ContextVar[int]" = contextvars.ContextVar(
+    "repro_autotune_tp", default=1)
+
+
+@contextlib.contextmanager
+def tp_shards(n: int):
+    """Tag autotune cache keys with a tensor-parallel shard count."""
+    tok = _TP.set(max(int(n), 1))
+    try:
+        yield
+    finally:
+        _TP.reset(tok)
+
+
+def current_tp() -> int:
+    return _TP.get()
+
+
 def tune_key(op: str, B: int, n: int, d_in: int, d_out: int,
              dtype: str = "float32", backend: Optional[str] = None,
              d_mid: Optional[int] = None,
-             d_page: Optional[int] = None) -> str:
+             d_page: Optional[int] = None,
+             tp: Optional[int] = None) -> str:
     """Canonical cache key; B is bucketed to the next power of two.
     ``d_mid`` (the ff megakernel's hidden width d_ff/n) extends the key for
     ops whose tiling couples three weight tensors — omitted (and absent
     from the key) for the single-matmul ops.  ``d_page`` extends it again
-    for the paged decode op (key tiles clamp to the page size)."""
+    for the paged decode op (key tiles clamp to the page size).  ``tp``
+    defaults to the ambient :func:`tp_shards` count and suffixes the key
+    with ``|tp{N}`` when the shape is a per-shard slice (N > 1)."""
     backend = backend or _backend()
+    tp = current_tp() if tp is None else max(int(tp), 1)
     mid = f"|j{d_mid}" if d_mid is not None else ""
     page = f"|p{d_page}" if d_page is not None else ""
+    shard = f"|tp{tp}" if tp > 1 else ""
     return (f"{op}|B{max(_next_pow2(B), 8)}|n{n}|k{d_in}|o{d_out}{mid}{page}"
-            f"|{dtype}|{backend}")
+            f"{shard}|{dtype}|{backend}")
 
 
 class BlockCache:
@@ -719,11 +752,33 @@ def model_attn_shape(cfg) -> Optional[Tuple[int, int, int]]:
     return kv, heads // kv, hd
 
 
+def mesh_shard_counts(mesh=None, model_axis: str = "model"
+                      ) -> Tuple[int, int]:
+    """``(tp, dp)`` shard counts for a mesh: tp = the model-axis size,
+    dp = every other axis folded together (the batch-sharding product).
+    ``mesh=None`` consults the ambient activation-sharding context
+    (:mod:`repro.sharding.ctx`); no mesh/ctx -> ``(1, 1)``."""
+    if mesh is None:
+        from repro.sharding import ctx as shard_ctx
+
+        actx = shard_ctx.current()
+        if actx is None:
+            return 1, 1
+        mesh, model_axis = actx.mesh, actx.model
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = max(int(sizes.get(model_axis, 1)), 1)
+    total = 1
+    for s in sizes.values():
+        total *= int(s)
+    return tp, max(total // tp, 1)
+
+
 def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
                            iters: int = 2, include_bwd: bool = False,
                            seq_len: Optional[int] = None,
                            kv_len: Optional[int] = None,
-                           page_size: Optional[int] = None
+                           page_size: Optional[int] = None,
+                           mesh=None, model_axis: str = "model"
                            ) -> Dict[str, Blocks]:
     """Pre-tune every fused-kernel shape a model will hit with ``tokens``
     rows (decode: batch; prefill: batch*seq; train: batch*seq).  Serving
@@ -741,9 +796,21 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
     ``flash_decode_paged`` (the page size rides in its cache key).
 
     ``dtype`` defaults to the config's COMPUTE dtype — ops.py casts weights
-    to the activation dtype, so that is the dtype trace-time lookups use."""
+    to the activation dtype, so that is the dtype trace-time lookups use.
+
+    ``mesh`` (or, when None, the ambient activation-sharding context) makes
+    the sweep tensor-parallel-aware: the ff megakernel and flash ops run
+    per-shard under :mod:`repro.kernels.tp`, so their tiles are tuned at
+    per-shard dims (hidden ``j/tp``, KV heads ``kvh/tp``, rows
+    ``tokens/dp``) under :func:`tp_shards` — the ``|tp{N}`` keys the
+    shard_map body will look up at trace time.  Non-divisible shards fall
+    back to the einsum route in the layers, so their sweep is skipped.  The
+    single-matmul dyad ops dispatch at global shapes (GSPMD partitions
+    them), so they keep un-suffixed keys."""
     if dtype is None:
         dtype = getattr(cfg, "compute_dtype", None) or "float32"
+    tp, dp = mesh_shard_counts(mesh, model_axis)
+    tokens_shard = max(tokens // dp, 1)
     tuned: Dict[str, Blocks] = {}
     attn = model_attn_shape(cfg)
     if attn is not None:
@@ -754,29 +821,38 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
 
         if attn_route() != "flash":
             attn = None
+    if attn is not None and tp > 1:
+        from repro.kernels import tp as ktp
+
+        if not ktp.tp_enabled() or attn[0] % tp != 0:
+            attn = None  # layer falls back to einsum attention under TP
     if attn is not None:
         kvh, g, hd = attn
-        if seq_len is not None and seq_len > 1:
-            blocks, _ = autotune_dyad("flash_prefill", seq_len, kvh, hd,
-                                      seq_len, dtype, d_mid=g, iters=iters)
-            tuned[tune_key("flash_prefill", seq_len, kvh, hd, seq_len,
-                           dtype, d_mid=g)] = blocks
-        if kv_len is not None:
-            win = getattr(cfg, "window", None)
-            L = min(kv_len, win) if win else kv_len
-            if page_size is not None:
-                blocks, _ = autotune_dyad(
-                    "flash_decode_paged", max(tokens, 1), kvh, hd, L, dtype,
-                    d_mid=g, d_page=page_size, iters=iters)
-                tuned[tune_key("flash_decode_paged", max(tokens, 1), kvh,
-                               hd, L, dtype, d_mid=g,
-                               d_page=page_size)] = blocks
-            else:
-                blocks, _ = autotune_dyad("flash_decode", max(tokens, 1),
-                                          kvh, hd, L, dtype, d_mid=g,
+        kvh //= tp
+        with tp_shards(tp):
+            if seq_len is not None and seq_len > 1:
+                blocks, _ = autotune_dyad("flash_prefill", seq_len, kvh, hd,
+                                          seq_len, dtype, d_mid=g,
                                           iters=iters)
-                tuned[tune_key("flash_decode", max(tokens, 1), kvh, hd, L,
+                tuned[tune_key("flash_prefill", seq_len, kvh, hd, seq_len,
                                dtype, d_mid=g)] = blocks
+            if kv_len is not None:
+                win = getattr(cfg, "window", None)
+                L = min(kv_len, win) if win else kv_len
+                rows = max(tokens_shard if tp > 1 else tokens, 1)
+                if page_size is not None:
+                    blocks, _ = autotune_dyad(
+                        "flash_decode_paged", rows, kvh, hd, L, dtype,
+                        d_mid=g, d_page=page_size, iters=iters)
+                    tuned[tune_key("flash_decode_paged", rows, kvh,
+                                   hd, L, dtype, d_mid=g,
+                                   d_page=page_size)] = blocks
+                else:
+                    blocks, _ = autotune_dyad("flash_decode", rows,
+                                              kvh, hd, L, dtype, d_mid=g,
+                                              iters=iters)
+                    tuned[tune_key("flash_decode", rows, kvh, hd, L,
+                                   dtype, d_mid=g)] = blocks
     variant = getattr(cfg.linear, "variant", "it")
     for n, d_in, d_out in model_dyad_shapes(cfg):
         ops = ["dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"]
@@ -787,18 +863,28 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
                                       iters=iters)
             tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
     ff = model_ff_fused_shape(cfg)
+    if ff is not None and tp > 1:
+        from repro.kernels import tp as ktp
+
+        if not ktp.tp_enabled() or ff[2] % tp != 0:
+            ff = None  # layer falls back to the einsum ff route under TP
     if ff is not None:
         n, k, j = ff
+        j //= tp
         mact = getattr(cfg, "act", "gelu")
         op = "dyad_ff_fused_swiglu" if mact == "swiglu" else "dyad_ff_fused"
-        blocks, _ = autotune_dyad(op, tokens, n, k, k, dtype, d_mid=j,
-                                  act=mact, iters=iters)
-        tuned[tune_key(op, tokens, n, k, k, dtype, d_mid=j)] = blocks
-        if include_bwd:
-            # the megakernel VJP composes the existing bwd kernels; the
-            # main loop above already tunes them at both ff shapes except
-            # the OT-fused down dgrad (d_in = d_ff/n, d_out = d_model/n)
-            blocks, _ = autotune_dyad("dyad_mm_dgrad", tokens, n, j, k,
-                                      dtype, iters=iters)
-            tuned[tune_key("dyad_mm_dgrad", tokens, n, j, k, dtype)] = blocks
+        with tp_shards(tp):
+            rows = tokens_shard if tp > 1 else tokens
+            blocks, _ = autotune_dyad(op, rows, n, k, k, dtype, d_mid=j,
+                                      act=mact, iters=iters)
+            tuned[tune_key(op, rows, n, k, k, dtype, d_mid=j)] = blocks
+            if include_bwd:
+                # the megakernel VJP composes the existing bwd kernels; the
+                # main loop above already tunes them at both ff shapes
+                # except the OT-fused down dgrad (d_in = d_ff/n,
+                # d_out = d_model/n)
+                blocks, _ = autotune_dyad("dyad_mm_dgrad", rows, n, j, k,
+                                          dtype, iters=iters)
+                tuned[tune_key("dyad_mm_dgrad", rows, n, j, k,
+                               dtype)] = blocks
     return tuned

@@ -60,6 +60,19 @@ import numpy as np
 from repro import obs
 from repro.models import model
 from repro.models.config import ModelCfg
+from repro.sharding import ctx as shard_ctx
+
+
+def _tuning_mesh_kwargs() -> dict:
+    """Mesh kwargs for ``ensure_tuned_for_model``, captured from the ambient
+    activation-sharding context: a TP serve tunes PER-SHARD kernel shapes
+    (``|tp{N}`` cache keys), a single-device serve tunes global ones.
+    Captured at engine construction so tuning stays mesh-correct even when
+    ``generate()`` runs outside the ``activation_sharding`` block."""
+    actx = shard_ctx.current()
+    if actx is None:
+        return {}
+    return {"mesh": actx.mesh, "model_axis": actx.model}
 
 
 def make_serve_step(cfg: ModelCfg):
@@ -131,6 +144,7 @@ class Engine:
         # trace bakes in whatever blocks the cache holds when it runs, so
         # the tuner must go first (no-op for non-Pallas configs)
         self._autotune = autotune
+        self._mesh_kw = _tuning_mesh_kwargs()
         self._step = jax.jit(make_serve_step(cfg))
         self._prefill = jax.jit(functools.partial(prefill, cfg))
         self._loops: Dict[tuple, callable] = {}
@@ -153,10 +167,10 @@ class Engine:
             # cache hits short-circuit, so repeat calls are cheap.  seq_len
             # covers the flash-prefill tiles, kv_len the flash-decode tiles
             # over the max_len cache (no-ops for non-flash configs).
-            ensure_tuned_for_model(self.cfg, tokens=B * S,
-                                   seq_len=S)                # prefill rows
-            ensure_tuned_for_model(self.cfg, tokens=B,
-                                   kv_len=self.max_len)      # decode rows
+            ensure_tuned_for_model(self.cfg, tokens=B * S, seq_len=S,
+                                   **self._mesh_kw)          # prefill rows
+            ensure_tuned_for_model(self.cfg, tokens=B, kv_len=self.max_len,
+                                   **self._mesh_kw)          # decode rows
         t_start = time.perf_counter()
         cache = model.init_cache(self.cfg, B, self.max_len, self.cache_dtype)
         with obs.span("prefill", cat="serve", batch=B, prompt_len=S):
@@ -389,6 +403,7 @@ class ContinuousBatchingEngine:
         self.paged = page_size is not None
         self.page_size = page_size
         self._autotune = autotune
+        self._mesh_kw = _tuning_mesh_kwargs()
         if autotune:
             from repro.perf.autotune import ensure_tuned_for_model
 
@@ -396,7 +411,8 @@ class ContinuousBatchingEngine:
             # (kv_len covers the flash-decode tiles over the slot caches);
             # prefill buckets are tuned per prompt length in _prefill_one
             ensure_tuned_for_model(cfg, tokens=max(n_slots, 1),
-                                   kv_len=max_len, page_size=page_size)
+                                   kv_len=max_len, page_size=page_size,
+                                   **self._mesh_kw)
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len = n_slots, max_len
         self.eos_id, self.temperature = eos_id, float(temperature)
@@ -462,7 +478,7 @@ class ContinuousBatchingEngine:
             # the admission prefill sees prompt_len rows; tune that bucket
             # before this trace bakes its tiles in (cache hits are cheap)
             ensure_tuned_for_model(self.cfg, tokens=prompt_len,
-                                   seq_len=prompt_len)
+                                   seq_len=prompt_len, **self._mesh_kw)
         cfg, max_len, dtype = self.cfg, self.max_len, self.cache_dtype
         temperature = self.temperature
 
@@ -500,7 +516,7 @@ class ContinuousBatchingEngine:
             from repro.perf.autotune import ensure_tuned_for_model
 
             ensure_tuned_for_model(self.cfg, tokens=chunk_len,
-                                   seq_len=chunk_len)
+                                   seq_len=chunk_len, **self._mesh_kw)
         cfg, temperature = self.cfg, self.temperature
         n_layers = self.cfg.n_layers
 

@@ -179,6 +179,17 @@ def cache_shardings(mesh, cache_specs, rules: MeshRules):
         if nd >= 2:
             spec[1] = rules.dp_spec
         leafname = parts[-1]
+        if leafname in ("pages_k", "pages_v") and nd == 5:
+            # (L, NP, P, K, hd) paged pool: axis 1 is the PAGE axis of one
+            # pool shared by every slot (page ids in the block table are
+            # global), so it must NOT shard over dp like a batch axis;
+            # kv heads shard over model when divisible, so the per-device
+            # pool shrinks with TP exactly like the dense rings — and
+            # matches the per-shard head slice kernels.tp dispatches on.
+            spec[1] = None
+            if leaf.shape[3] % msize == 0:
+                spec[3] = rules.model
+            return NamedSharding(mesh, P(*_guard(spec, leaf.shape, sizes)))
         if leafname in ("k", "v", "xk", "xv") and nd == 5:
             # (L, B, T, K, hd): kv heads over model when divisible, else
             # context-parallel cache (T over model) — never replicate a

@@ -1,6 +1,8 @@
 """The ff megakernel (up → act → down in one Pallas grid) vs the split
 kernel chain vs the einsum oracle: forward, both backward routes, dispatch
 from the mlp layer, and the 4-axis tile planner — all in interpret mode."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -244,12 +246,13 @@ def test_apply_mlp_megakernel_requires_bias_free():
                                rtol=2e-4, atol=2e-4)
 
 
-def test_megakernel_not_dispatched_under_sharding_ctx():
-    """An active TP activation-sharding context must fall back: the
-    megakernel is single-device and would skip the block-layout hidden
-    constraint that fuse_mlp carries (silent all-gather per layer)."""
-    import numpy as np_  # noqa: F401
+def test_megakernel_dispatch_under_sharding_ctx():
+    """PR 8 contract: an active sharding context no longer demotes the
+    megakernel — the shard_map TP wrappers (kernels/tp.py) keep the kernel
+    route, and REPRO_KERNEL_TP=off is the explicit hatch back to the
+    einsum fallback (route counters record the choice either way)."""
     from jax.sharding import Mesh
+    from repro import obs
     from repro.sharding import ctx as shard_ctx
 
     lc = factory.LinearCfg(impl="dyad", n_dyad=4, variant="it",
@@ -259,7 +262,15 @@ def test_megakernel_not_dispatched_under_sharding_ctx():
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
     with shard_ctx.activation_sharding(mesh, dp=("data",), model="model"):
-        assert not mlp_lib._ff_kernel_ready(p, lc, "gelu")
+        obs.reset_route_counts()
+        assert mlp_lib._ff_kernel_ready(p, lc, "gelu")
+        assert obs.routes_snapshot() == {"ff_tp:tp_fused": 1}
+        os.environ["REPRO_KERNEL_TP"] = "off"
+        try:
+            assert not mlp_lib._ff_kernel_ready(p, lc, "gelu")
+            assert obs.routes_snapshot()["ff_tp:tp_fallback"] == 1
+        finally:
+            del os.environ["REPRO_KERNEL_TP"]
     assert mlp_lib._ff_kernel_ready(p, lc, "gelu")
 
 

@@ -289,18 +289,25 @@ def test_dispatch_routes_and_fallbacks(monkeypatch):
 
     # cross-attention falls back (separate K/V positions, no kernel path)
     _attn(p, x, lc, kv_input=jax.random.normal(KEY, (2, 12, 32)))
-    # active TP sharding context falls back (single-device dataflow)
+    # PR 8: an active sharding context KEEPS the kernel route (the TP
+    # wrappers in kernels/tp.py run the same grids per shard) — only the
+    # REPRO_KERNEL_TP=off hatch demotes it to the einsum path
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
     with shard_ctx.activation_sharding(mesh, dp=("data",), model="model"):
         _attn(p, x, lc)
+        assert calls["prefill"] == 3
+        monkeypatch.setenv("REPRO_KERNEL_TP", "off")
+        _attn(p, x, lc)
+        assert calls["prefill"] == 3
+        monkeypatch.delenv("REPRO_KERNEL_TP")
     # non-contiguous/per-batch positions on the no-cache path fall back
     _attn(p, x, lc, positions=jnp.tile(jnp.arange(8), (2, 1)))
     # flash=False (the config gate) and REPRO_KERNEL_ATTN=xla fall back
     _attn(p, x, lc, flash=False)
     monkeypatch.setenv("REPRO_KERNEL_ATTN", "xla")
     _attn(p, x, lc)
-    assert calls == {"prefill": 2, "decode": 1}
+    assert calls == {"prefill": 3, "decode": 1}
 
 
 def test_attn_route_env(monkeypatch):

@@ -206,6 +206,36 @@ def test_bwd_op_keys_are_distinct_from_fwd(cache):
     assert get_tuned_blocks("dyad_mm_dgrad", 32, 4, 64, 128)["block_o"] == 64
 
 
+def test_tp_shard_keys_are_distinct_from_single_device(cache):
+    """A per-shard shape tuned under tensor parallelism must never collide
+    with a single-device entry for the same dims: the ambient tp_shards
+    count suffixes the key (|tpN), and tp=1 keys keep the legacy spelling
+    so every committed cache entry stays valid."""
+    from repro.perf.autotune import tp_shards
+
+    base = tune_key("dyad_ff_fused", 256, 4, 64, 64, d_mid=128)
+    assert "|tp" not in base                       # legacy spelling intact
+    with tp_shards(2):
+        k2 = tune_key("dyad_ff_fused", 256, 4, 64, 64, d_mid=128)
+    with tp_shards(4):
+        k4 = tune_key("dyad_ff_fused", 256, 4, 64, 64, d_mid=128)
+    assert len({base, k2, k4}) == 3 and "|tp2|" in k2 and "|tp4|" in k4
+    # explicit tp= overrides the ambient count; tp=1 is the no-suffix case
+    assert tune_key("dyad_ff_fused", 256, 4, 64, 64, d_mid=128, tp=1) == base
+    with tp_shards(8):
+        assert tune_key("dyad_ff_fused", 256, 4, 64, 64,
+                        d_mid=128, tp=2) == k2
+    # lookups route through the same ambient tag: a tp2 entry must be
+    # invisible to single-device lookups of the same shape (and vice versa)
+    cache.put(k2, {"block_b": 8, "block_o": 64, "block_k": 128})
+    assert get_tuned_blocks("dyad_ff_fused", 256, 4, 64, 64,
+                            d_mid=128) != {"block_b": 8, "block_o": 64,
+                                           "block_k": 128}
+    with tp_shards(2):
+        assert get_tuned_blocks("dyad_ff_fused", 256, 4, 64, 64,
+                                d_mid=128)["block_o"] == 64
+
+
 def test_bwd_cache_corrupt_file_recovery(cache):
     """Corrupt user cache: bwd key lookups degrade to defaults, and the
     next put() rewrites a valid file containing the bwd entry."""
