@@ -71,6 +71,20 @@ def run():
          fused_vs_split=round(t_route["split"] / t_route["fused"], 2))
     emit("smoke_ff_megakernel_split", t_route["split"], shape=(TOKENS, D, FF))
 
+    # tiny quantized-ff cell: the int8 weight-stream megakernel
+    # (in-kernel dequant) vs the fp megakernel above, same module —
+    # numerical drift is pinned by tests/test_quant.py; this cell keeps
+    # the quant route's dispatch + timing alive in the CI trajectory.
+    from repro import obs, quant
+
+    pq = quant.quantize_params(pf)
+    obs.reset_route_counts()
+    fq = jax.jit(lambda p, x: kops.dyad_ff_quant(p, x, act="relu"))
+    t_q = time_fn(fq, pq, x, iters=5)
+    emit("smoke_ff_megakernel_int8", t_q, shape=(TOKENS, D, FF),
+         vs_fp_fused=round(t_route["fused"] / t_q, 2),
+         weight_bytes_ratio=4.0)
+
     # tiny flash-attention cells: the Pallas prefill kernel vs the chunked
     # XLA fallback at smoke dims, so attention-kernel regressions fail the
     # bench-smoke CI gate.  Mirrors the attention suite's protocol.

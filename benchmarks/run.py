@@ -17,6 +17,10 @@ the last committed baseline.  Mapping to the paper:
 * memory           — Table 11 (params / checkpoint / in-training memory)
 * width_sweep      — Figure 6 (speedup vs model width)
 * mnist            — §3.4.5 (vision probe on CPU)
+* quant            — beyond-paper: int8/fp8 quantized weight streams
+                     (in-kernel dequant) vs the fp megakernel at a
+                     decode-shaped batch, int8 paged-KV capacity, and
+                     end-to-end greedy token match vs the fp routes
 * serve_throughput — beyond-paper: end-to-end serving tokens/sec
 * train_step       — §1 headline (training speed): full fwd+bwd+AdamW step
                      on DYAD vs DENSE ff blocks, einsum-VJP vs fused bwd
@@ -52,9 +56,10 @@ def main(argv=None) -> int:
     # importing the suite modules registers them (repro.perf.register)
     from benchmarks import (bench_attention, bench_ff_fused,  # noqa: F401
                             bench_ff_timing, bench_memory, bench_mnist,
-                            bench_quality, bench_serve_throughput,
-                            bench_smoke, bench_tp_scaling,
-                            bench_train_step, bench_width_sweep)
+                            bench_quality, bench_quant,
+                            bench_serve_throughput, bench_smoke,
+                            bench_tp_scaling, bench_train_step,
+                            bench_width_sweep)
 
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--suite", action="append", default=None,

@@ -30,19 +30,24 @@ def linear_cfg(spec: str) -> factory.LinearCfg:
     "dyad_it_4_kernel_einsumbwd" (kernel forward, einsum-VJP oracle
     backward — the use_kernel_bwd=False escape hatch) |
     "dyad_it_4_kernel_ffused" (whole ff module as ONE Pallas megakernel —
-    up [+ gate], in-register activation, down; hidden never leaves VMEM)."""
+    up [+ gate], in-register activation, down; hidden never leaves VMEM) |
+    "dyad_it_4_kernel_ffused_w8" (serving-only: stream per-block int8
+    weight sidecars with in-kernel dequant; "wfp8" for float8_e4m3fn;
+    requires params through ``repro.quant.quantize_params``)."""
     if spec == "dense":
         return DENSE
     parts = spec.split("_")
     assert parts[0] == "dyad", spec
     variant = parts[1] if len(parts) > 1 else "it"
     n = int(parts[2]) if len(parts) > 2 and parts[2].isdigit() else 4
+    quant = ("int8" if "w8" in parts
+             else "fp8" if "wfp8" in parts else None)
     return factory.LinearCfg(impl="dyad", n_dyad=n, variant=variant,
                              cat="cat" in parts, fuse_mlp="fused" in parts,
                              use_kernel="kernel" in parts,
                              use_kernel_bwd="einsumbwd" not in parts,
                              fuse_ff_kernel="ffused" in parts,
-                             scope="ff")
+                             quant=quant, scope="ff")
 
 
 # ---------------------------------------------------------------------------

@@ -9,7 +9,7 @@ projection of any architecture to DYAD, exactly the paper's drop-in story.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,15 @@ class LinearCfg:
     # token "ffused" (e.g. "dyad_it_4_kernel_ffused");
     # REPRO_KERNEL_FF=fused|split forces the route inside the op.
     fuse_ff_kernel: bool = False
+    # serving-only weight quantization: "int8" | "fp8" streams the
+    # per-block quantized sidecar leaves (repro.quant.quantize_params)
+    # through the dequant-at-VMEM-load kernel bodies.  Forward-only — the
+    # dispatch sites require the sidecars to be PRESENT (an un-quantized
+    # param tree falls through to the fp routes untouched), so training
+    # params never take it.  Spec token "w8"/"wfp8"
+    # (e.g. "dyad_it_4_kernel_ffused_w8"); REPRO_KERNEL_QUANT=off restores
+    # bit-identical fp behavior.
+    quant: Optional[str] = None
 
     def dyad_at(self, site: str) -> bool:
         if self.impl != "dyad":
@@ -92,6 +101,22 @@ def init(
 def apply(params: Params, x: jax.Array, cfg: LinearCfg, *, site: str = "ff") -> jax.Array:
     if "w1" in params:  # dyad params
         n, d_out, d_in = params["w1"].shape
+        if cfg.quant and cfg.use_kernel:
+            from repro import obs, quant
+            from repro.kernels import ops as kops
+
+            # forward-only: requires the offline sidecars — a tree without
+            # them (training params) falls through to the fp routes.
+            ready = quant.module_quantized(params) and quant.enabled()
+            obs.route_event("mm_quant", cfg.quant if ready else "fp_fallback",
+                            site=site)
+            if ready:
+                y = kops.dyad_mm_quant(x, params["w1_q"], params["w2_q"],
+                                       params["w1_s"], params["w2_s"],
+                                       variant=cfg.variant)
+                if "b" in params:
+                    y = y + params["b"].astype(y.dtype)
+                return y
         return dyad.apply(params, x, cfg.spec(n * d_in, n * d_out))
     return linear.apply(params, x)
 

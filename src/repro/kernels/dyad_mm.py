@@ -870,3 +870,377 @@ def dyad_ff_fused(
     if db or do:
         z1, z2 = z1[:B, :, :d_out], z2[:B, :, :d_out]
     return z1, z2
+
+
+# -- quantized bodies: int8/fp8 weight streams, dequant at the VMEM load ------
+#
+# Weight tiles stream in their QUANTIZED dtype (1 byte/elem — the HBM
+# stream the forward is bound on shrinks 2-4x); the per-(block, out_row)
+# fp32 scales (``repro.quant.quantize_dyad_weight``) ride as tiny sidecar
+# operands.  Because each scale is constant along the contracted axis, the
+# dequant is a single epilogue multiply on the fp32 partial product:
+#
+#     acc += (x_tile @ q_tile^T) * s_tile        (exact: s is k-invariant)
+#
+# — the integer payload is cast to the activation dtype in-register (int8
+# magnitudes <= 127 and every fp8 value are exactly representable in bf16
+# and fp32, so the cast is lossless) and never exists dequantized in HBM.
+# Activation/hidden dataflow, grids, and tile planning are identical to
+# the unquantized bodies; the ops autotune under ``*_w8`` keys whose dtype
+# field carries the weight payload dtype.
+
+
+def _dyad_kernel_q(x1_ref, x2_ref, w1_ref, w2_ref, s1_ref, s2_ref, o_ref,
+                   acc_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dn = (((1,), (1,)), ((), ()))
+    acc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], w1_ref[0].astype(x1_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * s1_ref[0]
+    acc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], w2_ref[0].astype(x2_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * s2_ref[0]
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[:, 0, :] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _dyad_kernel_two_q(x1_ref, x2_ref, w1_ref, w2_ref, s1_ref, s2_ref,
+                       o1_ref, o2_ref, acc1_ref, acc2_ref, *, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    dn = (((1,), (1,)), ((), ()))
+    acc1_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], w1_ref[0].astype(x1_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * s1_ref[0]
+    acc2_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], w2_ref[0].astype(x2_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * s2_ref[0]
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o1_ref[:, 0, :] = acc1_ref[...].astype(o1_ref.dtype)
+        o2_ref[:, 0, :] = acc2_ref[...].astype(o2_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bB", "bO", "bK", "fused", "interpret")
+)
+def _dyad_mm_q_impl(x1, x2, w1, w2, s1, s2, *, bB: int, bO: int, bK: int,
+                    fused: bool, interpret: bool):
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    nk = d_in // bK
+    grid = (n, B // bB, d_out // bO, nk)
+
+    x_spec = pl.BlockSpec((bB, 1, bK), lambda g, b, o, k: (b, g, k))
+    w_spec = pl.BlockSpec((1, bO, bK), lambda g, b, o, k: (g, o, k))
+    s_spec = pl.BlockSpec((1, bO), lambda g, b, o, k: (g, o))
+    o_spec = pl.BlockSpec((bB, 1, bO), lambda g, b, o, k: (b, g, o))
+    out_sds = jax.ShapeDtypeStruct((B, n, d_out), x1.dtype)
+    acc = pltpu.VMEM((bB, bO), jnp.float32)
+    in_specs = [x_spec, x_spec, w_spec, w_spec, s_spec, s_spec]
+    params = _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"))
+
+    if fused:
+        return pl.pallas_call(
+            functools.partial(_dyad_kernel_q, nk=nk),
+            grid=grid, in_specs=in_specs, out_specs=o_spec,
+            out_shape=out_sds, scratch_shapes=[acc],
+            compiler_params=params, interpret=interpret,
+        )(x1, x2, w1, w2, s1, s2)
+    return pl.pallas_call(
+        functools.partial(_dyad_kernel_two_q, nk=nk),
+        grid=grid, in_specs=in_specs, out_specs=[o_spec, o_spec],
+        out_shape=[out_sds, out_sds], scratch_shapes=[acc, acc],
+        compiler_params=params, interpret=interpret,
+    )(x1, x2, w1, w2, s1, s2)
+
+
+def _prep_quant_mm(op, x1, x2, w1, w2, s1, s2, block_b, block_o, block_k):
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    # the op key's dtype field carries the WEIGHT payload dtype (int8/fp8):
+    # quantized tiles stream fewer bytes, so their tuned tiles must never
+    # collide with the unquantized entries for the same shape.
+    bb, bo, bk = resolve_blocks(op, B, n, d_in, d_out, w1.dtype,
+                                block_b, block_o, block_k)
+    plan = plan_tiles(B, d_out, d_in, bb, bo, bk)
+    x1, x2, w1, w2 = _pad_inputs(plan, x1, x2, w1, w2)
+    do = plan.padded_o - d_out
+    if do:
+        # padded out rows hold zero weights; their scale value is moot
+        s1 = jnp.pad(s1, ((0, 0), (0, do)))
+        s2 = jnp.pad(s2, ((0, 0), (0, do)))
+    return x1, x2, w1, w2, s1, s2, plan
+
+
+def dyad_mm_blocks_q(
+    x1: jax.Array,
+    x2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    s1: jax.Array,
+    s2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """:func:`dyad_mm_blocks` with quantized weight streams.
+
+    w1, w2: (n_dyad, d_out, d_in) int8/fp8 payloads; s1, s2: (n_dyad,
+    d_out) fp32 per-(block, out_row) scales.  Output in x1's dtype."""
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    x1, x2, w1, w2, s1, s2, plan = _prep_quant_mm(
+        "dyad_mm_blocks_w8", x1, x2, w1, w2, s1, s2,
+        block_b, block_o, block_k)
+    out = _dyad_mm_q_impl(x1, x2, w1, w2, s1, s2, bB=plan.bB, bO=plan.bO,
+                          bK=plan.bK, fused=True, interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_out:
+        out = out[:B, :, :d_out]
+    return out
+
+
+def dyad_mm_blocks_two_q(
+    x1: jax.Array,
+    x2: jax.Array,
+    w1: jax.Array,
+    w2: jax.Array,
+    s1: jax.Array,
+    s2: jax.Array,
+    *,
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    interpret: bool = False,
+):
+    """As :func:`dyad_mm_blocks_q` but returns (z1, z2) separately (OT/DT)."""
+    B, n, d_in = x1.shape
+    _, d_out, _ = w1.shape
+    x1, x2, w1, w2, s1, s2, plan = _prep_quant_mm(
+        "dyad_mm_blocks_two_w8", x1, x2, w1, w2, s1, s2,
+        block_b, block_o, block_k)
+    z1, z2 = _dyad_mm_q_impl(x1, x2, w1, w2, s1, s2, bB=plan.bB, bO=plan.bO,
+                             bK=plan.bK, fused=False, interpret=interpret)
+    if plan.padded_b != B or plan.padded_o != d_out:
+        z1, z2 = z1[:B, :, :d_out], z2[:B, :, :d_out]
+    return z1, z2
+
+
+def _ff_kernel_q(x1_ref, x2_ref, wu1_ref, wu2_ref, wd1_ref, wd2_ref,
+                 su1_ref, su2_ref, sd1_ref, sd2_ref, z1_ref, z2_ref,
+                 hacc_ref, acc1_ref, acc2_ref, *, nj: int, nk: int,
+                 act: str):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_down():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    @pl.when(k == 0)
+    def _init_up():
+        hacc_ref[...] = jnp.zeros_like(hacc_ref)
+
+    dn = (((1,), (1,)), ((), ()))
+    hacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wu1_ref[0].astype(x1_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * su1_ref[0]
+    hacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wu2_ref[0].astype(x2_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * su2_ref[0]
+
+    @pl.when(k == nk - 1)
+    def _act_and_down():
+        h = _FF_ACTS[act](hacc_ref[...]).astype(x1_ref.dtype)
+        acc1_ref[...] += jax.lax.dot_general(
+            h, wd1_ref[0].astype(h.dtype), dn,
+            preferred_element_type=jnp.float32) * sd1_ref[0]
+        acc2_ref[...] += jax.lax.dot_general(
+            h, wd2_ref[0].astype(h.dtype), dn,
+            preferred_element_type=jnp.float32) * sd2_ref[0]
+
+    @pl.when(jnp.logical_and(j == nj - 1, k == nk - 1))
+    def _flush():
+        z1_ref[:, 0, :] = acc1_ref[...].astype(z1_ref.dtype)
+        z2_ref[:, 0, :] = acc2_ref[...].astype(z2_ref.dtype)
+
+
+def _ff_kernel_swiglu_q(x1_ref, x2_ref, wg1_ref, wg2_ref, wu1_ref, wu2_ref,
+                        wd1_ref, wd2_ref, sg1_ref, sg2_ref, su1_ref,
+                        su2_ref, sd1_ref, sd2_ref, z1_ref, z2_ref,
+                        gacc_ref, hacc_ref, acc1_ref, acc2_ref, *,
+                        nj: int, nk: int):
+    j = pl.program_id(3)
+    k = pl.program_id(4)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _init_down():
+        acc1_ref[...] = jnp.zeros_like(acc1_ref)
+        acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    @pl.when(k == 0)
+    def _init_up():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+        hacc_ref[...] = jnp.zeros_like(hacc_ref)
+
+    dn = (((1,), (1,)), ((), ()))
+    gacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wg1_ref[0].astype(x1_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * sg1_ref[0]
+    gacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wg2_ref[0].astype(x2_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * sg2_ref[0]
+    hacc_ref[...] += jax.lax.dot_general(
+        x1_ref[:, 0, :], wu1_ref[0].astype(x1_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * su1_ref[0]
+    hacc_ref[...] += jax.lax.dot_general(
+        x2_ref[:, 0, :], wu2_ref[0].astype(x2_ref.dtype), dn,
+        preferred_element_type=jnp.float32) * su2_ref[0]
+
+    @pl.when(k == nk - 1)
+    def _act_and_down():
+        h = (jax.nn.silu(gacc_ref[...]) * hacc_ref[...]).astype(x1_ref.dtype)
+        acc1_ref[...] += jax.lax.dot_general(
+            h, wd1_ref[0].astype(h.dtype), dn,
+            preferred_element_type=jnp.float32) * sd1_ref[0]
+        acc2_ref[...] += jax.lax.dot_general(
+            h, wd2_ref[0].astype(h.dtype), dn,
+            preferred_element_type=jnp.float32) * sd2_ref[0]
+
+    @pl.when(jnp.logical_and(j == nj - 1, k == nk - 1))
+    def _flush():
+        z1_ref[:, 0, :] = acc1_ref[...].astype(z1_ref.dtype)
+        z2_ref[:, 0, :] = acc2_ref[...].astype(z2_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bB", "bO", "bJ", "bK", "act", "interpret")
+)
+def _dyad_ff_q_impl(x1, x2, weights, scales, *, bB: int, bO: int, bJ: int,
+                    bK: int, act: str, interpret: bool):
+    B, n, d_in = x1.shape
+    gated = act == "swiglu"
+    wd1 = weights[-2]
+    d_ffb = wd1.shape[2]
+    d_out = wd1.shape[1]
+    nj = d_ffb // bJ
+    nk = d_in // bK
+    grid = (n, B // bB, d_out // bO, nj, nk)
+
+    x_spec = pl.BlockSpec((bB, 1, bK), lambda g, b, o, j, k: (b, g, k))
+    wu_spec = pl.BlockSpec((1, bJ, bK), lambda g, b, o, j, k: (g, j, k))
+    wd_spec = pl.BlockSpec((1, bO, bJ), lambda g, b, o, j, k: (g, o, j))
+    su_spec = pl.BlockSpec((1, bJ), lambda g, b, o, j, k: (g, j))
+    sd_spec = pl.BlockSpec((1, bO), lambda g, b, o, j, k: (g, o))
+    z_spec = pl.BlockSpec((bB, 1, bO), lambda g, b, o, j, k: (b, g, o))
+    out_sds = jax.ShapeDtypeStruct((B, n, d_out), x1.dtype)
+
+    n_up = 4 if gated else 2
+    in_specs = ([x_spec, x_spec] + [wu_spec] * n_up + [wd_spec, wd_spec]
+                + [su_spec] * n_up + [sd_spec, sd_spec])
+    scratch = ([pltpu.VMEM((bB, bJ), jnp.float32)] * (2 if gated else 1)
+               + [pltpu.VMEM((bB, bO), jnp.float32)] * 2)
+    body = (functools.partial(_ff_kernel_swiglu_q, nj=nj, nk=nk) if gated
+            else functools.partial(_ff_kernel_q, nj=nj, nk=nk, act=act))
+
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[z_spec, z_spec],
+        out_shape=[out_sds, out_sds],
+        scratch_shapes=scratch,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x1, x2, *weights, *scales)
+
+
+def dyad_ff_fused_q(
+    x1: jax.Array,
+    x2: jax.Array,
+    wu1: jax.Array,
+    wu2: jax.Array,
+    wd1: jax.Array,
+    wd2: jax.Array,
+    su1: jax.Array,
+    su2: jax.Array,
+    sd1: jax.Array,
+    sd2: jax.Array,
+    *,
+    wg1: jax.Array = None,
+    wg2: jax.Array = None,
+    sg1: jax.Array = None,
+    sg2: jax.Array = None,
+    act: str = "gelu",
+    block_b: int = None,
+    block_o: int = None,
+    block_k: int = None,
+    block_j: int = None,
+    interpret: bool = False,
+):
+    """:func:`dyad_ff_fused` with quantized weight streams.
+
+    wu*/wg*: (n, d_ff_b, d_in) int8/fp8 payloads with su*/sg* (n, d_ff_b)
+    fp32 scales; wd*: (n, d_out, d_ff_b) payloads with sd* (n, d_out)
+    scales.  Activation/hidden dataflow is IDENTICAL to the unquantized
+    megakernel — only the weight streams shrink.  Tiles resolve under the
+    ``dyad_ff_fused[_swiglu]_w8`` op keys (dtype field = payload dtype)."""
+    gated = act == "swiglu"
+    if gated != (wg1 is not None) or gated != (wg2 is not None):
+        raise ValueError("wg1/wg2 must be passed exactly when act='swiglu'")
+    if gated and (sg1 is None or sg2 is None):
+        raise ValueError("sg1/sg2 must be passed when act='swiglu'")
+    if act not in _FF_ACTS and not gated:
+        raise ValueError(f"unsupported megakernel activation {act!r}")
+    B, n, d_in = x1.shape
+    _, d_ffb, _ = wu1.shape
+    _, d_out, _ = wd1.shape
+    op = "dyad_ff_fused_swiglu_w8" if gated else "dyad_ff_fused_w8"
+    bb, bo, bk, bj = resolve_ff_blocks(op, B, n, d_in, d_out, d_ffb,
+                                       wu1.dtype, block_b, block_o, block_k,
+                                       block_j)
+    plan = plan_ff_tiles(B, d_out, d_ffb, d_in, bb, bo, bj, bk)
+    db, do = plan.padded_b - B, plan.padded_o - d_out
+    dj, dk = plan.padded_j - d_ffb, plan.padded_k - d_in
+    if db or dk:
+        x1 = jnp.pad(x1, ((0, db), (0, 0), (0, dk)))
+        x2 = jnp.pad(x2, ((0, db), (0, 0), (0, dk)))
+    ups = (wg1, wg2, wu1, wu2) if gated else (wu1, wu2)
+    s_ups = (sg1, sg2, su1, su2) if gated else (su1, su2)
+    if dj or dk:
+        ups = tuple(jnp.pad(w, ((0, 0), (0, dj), (0, dk))) for w in ups)
+    if dj:
+        s_ups = tuple(jnp.pad(s, ((0, 0), (0, dj))) for s in s_ups)
+    downs = (wd1, wd2)
+    s_downs = (sd1, sd2)
+    if do or dj:
+        downs = tuple(jnp.pad(w, ((0, 0), (0, do), (0, dj))) for w in downs)
+    if do:
+        s_downs = tuple(jnp.pad(s, ((0, 0), (0, do))) for s in s_downs)
+    z1, z2 = _dyad_ff_q_impl(x1, x2, ups + downs, s_ups + s_downs,
+                             bB=plan.bB, bO=plan.bO, bJ=plan.bJ, bK=plan.bK,
+                             act=act, interpret=interpret)
+    if db or do:
+        z1, z2 = z1[:B, :, :d_out], z2[:B, :, :d_out]
+    return z1, z2

@@ -779,6 +779,72 @@ def _paged_kv_index_map(bT: int, tiles_per_page: int):
     return index
 
 
+def _paged_scale_index_map(bT: int, tiles_per_page: int):
+    """The 3-D twin of :func:`_paged_kv_index_map` for the per-token-row
+    scale pools ``(n_pages, K, P)`` — the SAME block-table gather routes
+    the (1, 1, bT) scale tile alongside its quantized K/V tile."""
+
+    def index(b, kh, t, idx_ref, bt_ref):
+        t_eff = jnp.minimum(t, jnp.maximum(idx_ref[b], 0) // bT)
+        blk = t_eff // tiles_per_page
+        return (bt_ref[b, blk], kh, t_eff % tiles_per_page)
+
+    return index
+
+
+def _decode_paged_kernel_q(idx_ref, bt_ref, q_ref, k_ref, v_ref, sk_ref,
+                           sv_ref, o_ref, m_s, l_s, acc, *, bT: int,
+                           l_real: int, window: Optional[int],
+                           scale: float):
+    """Quantized-KV twin of :func:`_decode_paged_kernel`: K/V tiles arrive
+    as int8 payloads and are dequantized IN-KERNEL with their per-token-row
+    fp32 scales.  Each scale is constant along the head dim the dots
+    contract, so dequant folds into the score columns (``s * sk[None, :]``)
+    and the probability rows (``p * sv[None, :]``) exactly — the payload is
+    never expanded to fp in HBM.  Dead page rows hold zero scales (pool
+    init), which the position mask already excludes."""
+    b, t = pl.program_id(0), pl.program_id(2)
+    nt = pl.num_programs(2)
+    idx = idx_ref[b]
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when(t * bT <= idx)
+    def _compute():
+        G = q_ref.shape[2]
+        q = q_ref[0, 0]                                   # (G, h)
+        k = k_ref[0, 0].astype(q.dtype)                   # (bT, h) dequant
+        sk = sk_ref[0, 0]                                 # (bT,) fp32
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sk[None, :] * scale
+        j = jax.lax.broadcasted_iota(jnp.int32, (G, bT), 1) + t * bT
+        mask = jnp.logical_and(j <= idx, j < l_real)
+        if window is not None:
+            mask = jnp.logical_and(mask, idx - j < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_next = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_next)
+        p = jnp.where(mask, jnp.exp(s - m_next[:, :1]), 0.0)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_s[...] = m_next
+        sv = sv_ref[0, 0]                                 # (bT,) fp32
+        acc[...] = acc[...] * alpha[:, :1] + jax.lax.dot_general(
+            p * sv[None, :], v_ref[0, 0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(t == nt - 1)
+    def _flush():
+        l = l_s[:, :1]
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l, _TINY)).astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bT", "l_real", "window", "interpret")
 )
@@ -814,6 +880,43 @@ def _decode_paged_impl(q, k, v, idx, bt, *, bT, l_real, window, interpret):
     )(idx, bt, q, k, v)[0]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("bT", "l_real", "window", "interpret")
+)
+def _decode_paged_q_impl(q, k, v, sk, sv, idx, bt, *, bT, l_real, window,
+                         interpret):
+    B, K, G, h = q.shape
+    P = k.shape[2]
+    tp = P // bT
+    nt = bt.shape[1] * tp
+
+    q_spec = pl.BlockSpec((1, 1, G, h), lambda b, kh, t, i, m: (b, kh, 0, 0))
+    kv_spec = pl.BlockSpec((1, 1, bT, h), _paged_kv_index_map(bT, tp))
+    s_spec = pl.BlockSpec((1, 1, bT), _paged_scale_index_map(bT, tp))
+    scale = 1.0 / float(h) ** 0.5
+    body = functools.partial(_decode_paged_kernel_q, bT=bT, l_real=l_real,
+                             window=window, scale=scale)
+    return pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, K, nt),
+            in_specs=[q_spec, kv_spec, kv_spec, s_spec, s_spec],
+            out_specs=[q_spec],
+            scratch_shapes=[
+                pltpu.VMEM((G, _STATE_LANES), jnp.float32),
+                pltpu.VMEM((G, _STATE_LANES), jnp.float32),
+                pltpu.VMEM((G, h), jnp.float32),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, K, G, h), q.dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx, bt, q, k, v, sk, sv)[0]
+
+
 def flash_decode_paged(
     q: jax.Array,
     pages_k: jax.Array,
@@ -825,6 +928,8 @@ def flash_decode_paged(
     window: Optional[int] = None,
     block_k: int = None,
     interpret: bool = False,
+    scales_k: Optional[jax.Array] = None,
+    scales_v: Optional[jax.Array] = None,
 ):
     """One-token decode attention over a PAGED KV cache.
 
@@ -837,8 +942,16 @@ def flash_decode_paged(
     the tile coordinates themselves (ordered block tables, no ring).
     ``l_real`` bounds the logical length when the capacity ``n_blocks * P``
     overshoots it (page sizes that don't divide max_len).
+
+    ``scales_k``/``scales_v`` (together) mark the pools as QUANTIZED:
+    int8 payloads with per-token-row fp32 scales ``(n_pages, P, K)``
+    (``repro.quant.quantize_kv_rows`` at the write site).  The kernel
+    gathers the scale tiles through the same prefetched block table and
+    dequantizes in-VMEM — K/V stream 2-4x fewer HBM bytes.
     Returns (B, 1, K, G, h) / (B, K, G, h) matching the q rank.
     """
+    if (scales_k is None) != (scales_v is None):
+        raise ValueError("scales_k and scales_v must be passed together")
     squeeze = q.ndim == 5
     if squeeze:
         q = q[:, 0]
@@ -848,15 +961,25 @@ def flash_decode_paged(
     cap = NB * P
     if l_real is None:
         l_real = cap
-    _, bk = resolve_attn_blocks("flash_decode_paged", B, K, h, cap, q.dtype,
+    _, bk = resolve_attn_blocks("flash_decode_paged", B, K, h, cap,
+                                pages_k.dtype if scales_k is not None
+                                else q.dtype,
                                 G, None, block_k, page=P)
     # a key tile must stay inside one page: largest divisor of P under the
     # requested tile (pages are pow2 in practice, so this is a pow2 clamp)
     bT = _largest_divisor(P, max(min(bk, P), 1))
     k = pages_k.transpose(0, 2, 1, 3)                     # (NP, K, P, h)
     v = pages_v.transpose(0, 2, 1, 3)
-    o = _decode_paged_impl(q, k, v, _as_offsets(idx, B),
-                           jnp.asarray(block_table, jnp.int32),
-                           bT=bT, l_real=int(l_real), window=window,
-                           interpret=interpret)
+    if scales_k is not None:
+        o = _decode_paged_q_impl(
+            q, k, v,
+            scales_k.transpose(0, 2, 1),                  # (NP, K, P)
+            scales_v.transpose(0, 2, 1),
+            _as_offsets(idx, B), jnp.asarray(block_table, jnp.int32),
+            bT=bT, l_real=int(l_real), window=window, interpret=interpret)
+    else:
+        o = _decode_paged_impl(q, k, v, _as_offsets(idx, B),
+                               jnp.asarray(block_table, jnp.int32),
+                               bT=bT, l_real=int(l_real), window=window,
+                               interpret=interpret)
     return o[:, None] if squeeze else o

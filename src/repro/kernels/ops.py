@@ -59,9 +59,11 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.kernels import flash_attn, ref
-from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_mm_blocks,
-                                   dyad_mm_blocks_two, dyad_mm_dgrad,
-                                   dyad_mm_dgrad_two, dyad_mm_wgrad)
+from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_ff_fused_q,
+                                   dyad_mm_blocks, dyad_mm_blocks_q,
+                                   dyad_mm_blocks_two, dyad_mm_blocks_two_q,
+                                   dyad_mm_dgrad, dyad_mm_dgrad_two,
+                                   dyad_mm_wgrad)
 
 
 @functools.lru_cache(maxsize=None)
@@ -480,6 +482,84 @@ def dyad_ff(params, x, *, act: str = "gelu", use_kernel_bwd: bool = True):
               params["down"]["w1"], params["down"]["w2"])
 
 
+# -- quantized forward routes -------------------------------------------------
+#
+# Serving-only: the quantized weights are a frozen snapshot, so these are
+# plain forward functions OUTSIDE the custom-VJP machinery — dispatch sites
+# (``layers.mlp``, ``core.factory``) route here only when not differentiating.
+# They stream the int8/fp8 SIDECAR leaves (``w*_q``/``w*_s`` from
+# ``repro.quant.quantize_params``) and never touch the retained fp32
+# originals — in particular there is no ``w.astype(x.dtype)`` cast: the
+# payload reaches the kernel in its quantized dtype and is dequantized at
+# the VMEM load (scale into the fp32 accumulator epilogue).
+
+
+def dyad_mm_quant(x, w1q, w2q, s1, s2, *, variant: str = "it"):
+    """Forward-only :func:`dyad_mm` streaming quantized weight sidecars.
+
+    w1q/w2q: (n, d_out, d_in) int8/fp8 payloads; s1/s2: (n, d_out) fp32
+    per-(block, out_row) scales."""
+    n, d_out, _ = w1q.shape
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    x1, x2 = ref.block_views(x2d, n, variant)
+    interpret = _interpret()
+    if variant == "it":
+        z = dyad_mm_blocks_q(x1, x2, w1q, w2q, s1, s2, interpret=interpret)
+        y = z.reshape(-1, n * d_out)
+    else:
+        z1, z2 = dyad_mm_blocks_two_q(x1, x2, w1q, w2q, s1, s2,
+                                      interpret=interpret)
+        y = ref.combine(z1, z2, variant)
+    return y.reshape(*lead, n * d_out)
+
+
+def dyad_ff_quant(params, x, *, act: str = "gelu"):
+    """Forward-only :func:`dyad_ff` streaming quantized weight sidecars.
+
+    ``params`` is the ``layers.mlp`` param dict AFTER
+    ``repro.quant.quantize_params`` (every projection carries
+    ``w1_q``/``w1_s``/``w2_q``/``w2_s``).  The fused route runs the
+    quantized megakernel (:func:`repro.kernels.dyad_mm.dyad_ff_fused_q`);
+    ``REPRO_KERNEL_FF=split`` composes the quantized mm kernels instead
+    (up [+ gate], XLA activation, down) — the same escape hatch surface as
+    the unquantized op."""
+    up, down = params["up"], params["down"]
+    gated = act == "swiglu"
+    n = up["w1_q"].shape[0]
+    d_out = down["w1_q"].shape[1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    x1, x2 = ref.block_views(x2d, n, "it")
+    interpret = _interpret()
+    if _ff_route() == "fused":
+        gate_kw = {}
+        if gated:
+            g = params["gate"]
+            gate_kw = dict(wg1=g["w1_q"], wg2=g["w2_q"],
+                           sg1=g["w1_s"], sg2=g["w2_s"])
+        z1, z2 = dyad_ff_fused_q(
+            x1, x2, up["w1_q"], up["w2_q"], down["w1_q"], down["w2_q"],
+            up["w1_s"], up["w2_s"], down["w1_s"], down["w2_s"],
+            act=act, interpret=interpret, **gate_kw)
+    else:
+        u = dyad_mm_blocks_q(x1, x2, up["w1_q"], up["w2_q"],
+                             up["w1_s"], up["w2_s"], interpret=interpret)
+        if gated:
+            g = params["gate"]
+            g_pre = dyad_mm_blocks_q(x1, x2, g["w1_q"], g["w2_q"],
+                                     g["w1_s"], g["w2_s"],
+                                     interpret=interpret)
+            h = jax.nn.silu(g_pre) * u
+        else:
+            h = ref.ACTS[act](u)
+        z1, z2 = dyad_mm_blocks_two_q(h, h, down["w1_q"], down["w2_q"],
+                                      down["w1_s"], down["w2_s"],
+                                      interpret=interpret)
+    y = ref.combine(z1, z2, "ot")
+    return y.reshape(*lead, n * d_out)
+
+
 # -- the flash-attention ops --------------------------------------------------
 #
 # ``flash_attention`` wraps the fused prefill kernel
@@ -616,15 +696,19 @@ def flash_decode(q, k, v, idx, *, window=None):
 
 
 def flash_decode_paged(q, pages_k, pages_v, block_table, idx, *,
-                       l_real=None, window=None):
+                       l_real=None, window=None, scales_k=None,
+                       scales_v=None):
     """One-token paged-cache decode attention (inference only, no VJP).
 
     q: (B,1,K,G,h) or (B,K,G,h); pages_k/pages_v: the (n_pages,P,K,h)
     shared page pool; ``block_table``: (B, n_blocks) int32 page ids (dead
     entries must point at the reserved scratch page 0); ``idx``: per-slot
     (B,) write index of the current token.  ``l_real`` bounds the logical
-    length when the block-table capacity overshoots it.
+    length when the block-table capacity overshoots it.  ``scales_k``/
+    ``scales_v`` (``(n_pages, P, K)`` fp32, together) mark the pools as
+    int8-quantized; the kernel dequantizes tiles in-VMEM after the
+    block-table gather.
     See :func:`repro.kernels.flash_attn.flash_decode_paged`."""
     return flash_attn.flash_decode_paged(
         q, pages_k, pages_v, block_table, idx, l_real=l_real, window=window,
-        interpret=_interpret())
+        scales_k=scales_k, scales_v=scales_v, interpret=_interpret())

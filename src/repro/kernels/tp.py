@@ -116,6 +116,55 @@ def dyad_ff_tp(params, x, *, act: str = "gelu", use_kernel_bwd: bool = True,
     return y.reshape(*lead, f_out)
 
 
+def dyad_ff_quant_tp(params, x, *, act: str = "gelu", ctx):
+    """``kops.dyad_ff_quant`` under tensor parallelism: the quantized
+    weight-stream megakernel per-shard.  The int8/fp8 payload sidecars
+    shard exactly like their fp32 originals (up/gate ``d_out`` over model,
+    down ``d_in``); the per-(block, out_row) scale sidecars follow the
+    payload's OUT axis — up/gate scales ``(n, d_mid)`` split over model,
+    down scales ``(n, d_out)`` replicate (the down's out rows are whole
+    per shard, only its contraction is split).  Forward-only, same
+    overlapped psum_scatter epilogue as :func:`dyad_ff_tp`."""
+    tp = _tp(ctx)
+    if tp == 1:
+        return kops.dyad_ff_quant(params, x, act=act)
+    lead, f_in = x.shape[:-1], x.shape[-1]
+    x2d = x.reshape(-1, f_in)
+    rows = _batch_axes(ctx, x2d.shape[0])
+    n, d_out = params["down"]["w1"].shape[0], params["down"]["w1"].shape[1]
+    f_out = n * d_out
+    scatter = f_out % tp == 0
+    model = ctx.model
+
+    names = ("gate", "up", "down") if act == "swiglu" else ("up", "down")
+    weights, in_specs = [], [P(rows, None)]
+    for nm in names:
+        if nm == "down":
+            w_spec, s_spec = P(None, None, model), P(None, None)
+        else:
+            w_spec, s_spec = P(None, model, None), P(None, model)
+        weights += [params[nm]["w1_q"], params[nm]["w2_q"],
+                    params[nm]["w1_s"], params[nm]["w2_s"]]
+        in_specs += [w_spec, w_spec, s_spec, s_spec]
+
+    def body(xs, *ws):
+        it = iter(ws)
+        ps = {nm: {"w1_q": next(it), "w2_q": next(it),
+                   "w1_s": next(it), "w2_s": next(it)} for nm in names}
+        y = kops.dyad_ff_quant(ps, xs, act=act)
+        if scatter:
+            return jax.lax.psum_scatter(y, model, scatter_dimension=1,
+                                        tiled=True)
+        return jax.lax.psum(y, model)
+
+    with autotune.tp_shards(tp):
+        y = compat_shard_map(
+            body, mesh=ctx.mesh, in_specs=tuple(in_specs),
+            out_specs=P(rows, model if scatter else None),
+            check_vma=False)(x2d, *weights)
+    return y.reshape(*lead, f_out)
+
+
 # -- flash attention ----------------------------------------------------------
 
 
@@ -186,22 +235,43 @@ def flash_decode_tp(q, k, v, idx, *, window=None, ctx):
 
 
 def flash_decode_paged_tp(q, pages_k, pages_v, block_table, idx, *,
-                          l_real=None, window=None, ctx):
+                          l_real=None, window=None, scales_k=None,
+                          scales_v=None, ctx):
     """``kops.flash_decode_paged`` sharded over KV heads: each device holds
     a head-slice of the WHOLE page pool (page ids are global, so the pool
     axis stays unsharded — see ``sharding/rules.cache_shardings``) and its
     full block table / scalar-prefetch machinery.  q: (B,1,K,G,h) or
-    (B,K,G,h); pages: (n_pages, P, K, h); block_table: (B, n_blocks)."""
+    (B,K,G,h); pages: (n_pages, P, K, h); block_table: (B, n_blocks).
+    Quantized pools ship ``scales_k``/``scales_v`` ``(n_pages, P, K)``
+    scale pools sharded over the same KV-head axis."""
     tp = _tp(ctx)
     if tp == 1:
         return kops.flash_decode_paged(q, pages_k, pages_v, block_table,
-                                       idx, l_real=l_real, window=window)
+                                       idx, l_real=l_real, window=window,
+                                       scales_k=scales_k, scales_v=scales_v)
     idx = jnp.asarray(idx, jnp.int32)
     rows = _batch_axes(ctx, q.shape[0])
     model = ctx.model
     q_spec = (P(rows, None, model, None, None) if q.ndim == 5
               else P(rows, model, None, None))
     pool_spec = P(None, None, model, None)
+    quant = scales_k is not None
+
+    if quant:
+        def body(qs, pk, pv, bt, i, sk, sv):
+            return kops.flash_decode_paged(qs, pk, pv, bt, i, l_real=l_real,
+                                           window=window, scales_k=sk,
+                                           scales_v=sv)
+
+        with autotune.tp_shards(tp):
+            return compat_shard_map(
+                body, mesh=ctx.mesh,
+                in_specs=(q_spec, pool_spec, pool_spec, P(rows, None),
+                          _off_spec(idx, rows), P(None, None, model),
+                          P(None, None, model)),
+                out_specs=q_spec, check_vma=False)(
+                    q, pages_k, pages_v, block_table, idx, scales_k,
+                    scales_v)
 
     def body(qs, pk, pv, bt, i):
         return kops.flash_decode_paged(qs, pk, pv, bt, i, l_real=l_real,

@@ -65,7 +65,30 @@ def ff_route_accounting(cfg, shape, sizes, rules) -> dict:
         route = "block_einsum"
         hidden = (2 * tokens * cfg.d_ff * dtype_bytes * cfg.n_layers
                   // max(dp * tp, 1))
-    return {"ff_route": route, "ff_hidden_bytes_est": int(hidden)}
+    # per-step ff WEIGHT stream (read once per step, sharded over tp):
+    # quantized serving (linear spec ..._w8 / --quant-weights) streams
+    # 1-byte payloads + the fp32 (n, d_out) scale sidecars instead of the
+    # compute-dtype tensors — the term bench_quant's bound_speedup acts on.
+    n_proj = 3 if getattr(cfg, "act", "gelu") == "swiglu" else 2
+    if ff is not None:
+        elems = n_proj * 2 * cfg.d_ff * cfg.d_model // ff[0]
+        # one fp32 scale per (block, out_row): d_ff rows per up-type
+        # tensor, d_model per down tensor
+        scale_rows = (n_proj - 1) * 2 * cfg.d_ff + 2 * cfg.d_model
+    else:
+        elems = n_proj * cfg.d_ff * cfg.d_model
+        scale_rows = 0
+    quant = getattr(getattr(cfg, "linear", None), "quant", None)
+    if quant and ff is not None and fused:
+        # quant dispatch needs the kernel route; einsum fallbacks stream fp
+        weight = elems * 1 + scale_rows * 4
+    else:
+        weight = elems * dtype_bytes
+        quant = None
+    weight = weight * cfg.n_layers // max(tp, 1)
+    return {"ff_route": route, "ff_hidden_bytes_est": int(hidden),
+            "ff_weight_bytes_est": int(weight),
+            "ff_weight_quant": quant}
 
 
 def active_param_count(cfg, params_specs) -> int:

@@ -29,8 +29,8 @@ def _load(dryrun_dir: str, mesh: str):
 
 def variants_table(cells, triples):
     """Side-by-side §Perf points: (arch, shape, [(label, linear, tag), ...])."""
-    rows = ["| cell | variant | peak GiB/dev | ff hidden GiB/dev | compute s | memory s | collective s | bound s | useful |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    rows = ["| cell | variant | peak GiB/dev | ff hidden GiB/dev | ff weights GiB/dev | compute s | memory s | collective s | bound s | useful |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
     for arch, shape, variants in triples:
         for label, linear, tag in variants:
             r = cells.get((arch, shape, linear, tag))
@@ -43,8 +43,16 @@ def variants_table(cells, triples):
             # predating the TP kernels
             hb = r.get("ff_hidden_bytes_est")
             hidden = "n/a" if hb is None else f"{hb / 2**30:.2f}"
+            # per-shard ff WEIGHT stream per step; int8/fp8 payloads show
+            # the quantized dtype next to the shrunken byte count.  Absent
+            # in JSONs predating quantized serving.
+            wb = r.get("ff_weight_bytes_est")
+            weights = "n/a" if wb is None else f"{wb / 2**30:.2f}"
+            if wb is not None and r.get("ff_weight_quant"):
+                weights += f" ({r['ff_weight_quant']})"
             rows.append(
                 f"| {arch}/{shape} | {label} | {peak:.1f} | {hidden} | "
+                f"{weights} | "
                 f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
                 f"{r['collective_s']:.3f} | {bound:.3f} | "
                 f"{r['useful_flops_ratio']:.2f} |")

@@ -86,6 +86,16 @@ def main():
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel axis size (dp * tp must equal the "
                          "visible device count when either exceeds 1)")
+    ap.add_argument("--quant-weights", choices=("int8", "fp8"), default=None,
+                    help="quantize the DYAD ff weights offline "
+                         "(repro.quant.quantize_params sidecars) and stream "
+                         "them through the in-kernel-dequant bodies; "
+                         "requires a kernel-routed linear spec.  "
+                         "REPRO_KERNEL_QUANT=off restores fp32 routes")
+    ap.add_argument("--quant-kv", choices=("int8",), default=None,
+                    help="paged mode: int8 KV page pools with per-token-row "
+                         "fp32 scale pools, dequantized in-kernel at decode "
+                         "(~2-4x more tokens per HBM byte)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
@@ -116,6 +126,14 @@ def main():
 def _run(args):
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
+    if args.quant_weights:
+        cfg = cfg.replace(linear=cfg.linear.replace(quant=args.quant_weights))
+    if args.quant_kv:
+        if args.engine != "continuous" or args.page_size is None:
+            raise SystemExit("--quant-kv requires --engine continuous with "
+                             "--page-size (the quantized layout is the "
+                             "paged pool)")
+        cfg = cfg.replace(kv_quant=args.quant_kv)
     key = jax.random.PRNGKey(args.seed)
     params = model.init_params(cfg, key)
     if args.ckpt_dir:
@@ -124,6 +142,10 @@ def _run(args):
             step, state = mgr.restore({"params": params})
             params = state["params"]
             print(f"[serve] restored checkpoint step {step}")
+    if args.quant_weights:
+        from repro import quant
+        params = quant.quantize_params(params, args.quant_weights)
+        print(f"[serve] quantized DYAD weight sidecars: {args.quant_weights}")
 
     max_len = args.prompt_len + args.new_tokens
 

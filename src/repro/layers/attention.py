@@ -322,10 +322,27 @@ def attention(
         kd, vd = cache["pages_k"].dtype, cache["pages_v"].dtype
         j = idx[:, None] + jnp.arange(S)         # (B, S) absolute positions
         pid = jnp.take_along_axis(bt, jnp.clip(j // P, 0, NB - 1), axis=1)
-        ck = cache["pages_k"].at[pid, j % P].set(k.astype(kd))
-        cv = cache["pages_v"].at[pid, j % P].set(v.astype(vd))
-        new_cache = {"pages_k": ck, "pages_v": cv, "block_table": bt,
-                     "idx": idx + S}
+        quant_kv = "scales_k" in cache
+        if quant_kv:
+            # int8 pool: quantize the new rows per (token, kv-head) —
+            # scale over the contracted head dim — and write payload +
+            # scale through the SAME block-table indices.  Chunked prefill
+            # (S > 1) takes this path too, so prefill pages are quantized.
+            from repro import quant as quant_lib
+            obs.route_event("kv_quant", "int8")
+            kq, ksc = quant_lib.quantize_kv_rows(k)
+            vq, vsc = quant_lib.quantize_kv_rows(v)
+            ck = cache["pages_k"].at[pid, j % P].set(kq.astype(kd))
+            cv = cache["pages_v"].at[pid, j % P].set(vq.astype(vd))
+            csk = cache["scales_k"].at[pid, j % P].set(ksc)
+            csv = cache["scales_v"].at[pid, j % P].set(vsc)
+            new_cache = {"pages_k": ck, "pages_v": cv, "scales_k": csk,
+                         "scales_v": csv, "block_table": bt, "idx": idx + S}
+        else:
+            ck = cache["pages_k"].at[pid, j % P].set(k.astype(kd))
+            cv = cache["pages_v"].at[pid, j % P].set(v.astype(vd))
+            new_cache = {"pages_k": ck, "pages_v": cv, "block_table": bt,
+                         "idx": idx + S}
         k_inflight, v_inflight = k, v
         attend_cache = True
         jl = jnp.arange(Lcap)[None, :]
@@ -335,8 +352,15 @@ def attention(
             # gathered from the pool (the S=1 flash decode path instead
             # gathers in-kernel through the prefetched block table).
             gpid = bt[:, jnp.arange(Lcap) // P]  # (B, Lcap)
-            k = ck[gpid, jnp.arange(Lcap) % P]   # (B, Lcap, K, h)
-            v = cv[gpid, jnp.arange(Lcap) % P]
+            gj = jnp.arange(Lcap) % P
+            k = ck[gpid, gj]                     # (B, Lcap, K, h)
+            v = cv[gpid, gj]
+            if quant_kv:
+                # XLA-side dequant of the dense view (oracle/off-TPU path)
+                k = (k.astype(jnp.float32)
+                     * csk[gpid, gj][..., None]).astype(k_inflight.dtype)
+                v = (v.astype(jnp.float32)
+                     * csv[gpid, gj][..., None]).astype(v_inflight.dtype)
     elif cache is not None and kv_input is None:
         idx = cache["idx"]
         L = cache["k"].shape[1]
@@ -412,8 +436,11 @@ def attention(
     if use_flash and paged and kv_input is None and S == 1:
         # paged decode: K/V tiles are gathered through the scalar-prefetched
         # block table in-kernel — the dense per-slot view is never built.
+        # Quantized pools ship their scale pools through the same gather;
+        # the kernel dequantizes per token-row in VMEM.
         o = fdp(qg, new_cache["pages_k"], new_cache["pages_v"], bt, idx,
-                window=window)
+                window=window, scales_k=new_cache.get("scales_k"),
+                scales_v=new_cache.get("scales_v"))
     elif use_flash and cache is not None and kv_input is None and S == 1:
         # ring-cache decode: per-slot key positions derive from the
         # scalar-prefetched write index inside the kernel.
@@ -463,18 +490,39 @@ def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 def init_paged_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
                         dtype=jnp.bfloat16, *, page_size: int,
-                        n_pages: int):
+                        n_pages: int, quant: Optional[str] = None):
     """Paged KV cache pytree: one shared ``(n_pages, page_size, K, h)``
     pool per K/V, a per-slot ``(batch, ceil(max_len / page_size))`` block
     table, and per-slot write indices.  Page 0 is RESERVED as the scratch
     page: block tables init to it, so unallocated entries (and the decode
     writes of free/prefilling lanes the engine points at it) land
     harmlessly off the live pages.  The engine's ``PageAllocator`` owns
-    pages ``1 .. n_pages - 1``."""
+    pages ``1 .. n_pages - 1``.
+
+    ``quant="int8"`` stores the pools as int8 payloads plus per-token-row
+    fp32 scale pools ``scales_k``/``scales_v`` ``(n_pages, page_size, K)``
+    (~2-4x more tokens per HBM byte vs bf16/fp32 pools); the write path
+    quantizes rows as they land and the paged decode kernel dequantizes
+    in-VMEM after the block-table gather."""
     n_blocks = -(-max_len // page_size)
-    return {
-        "pages_k": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
-        "pages_v": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+    cache = {
         "block_table": jnp.zeros((batch, n_blocks), jnp.int32),
         "idx": jnp.zeros((batch,), jnp.int32),
     }
+    if quant is not None:
+        if quant != "int8":
+            raise ValueError(f"kv_quant supports 'int8' only, got {quant!r}")
+        cache["pages_k"] = jnp.zeros(
+            (n_pages, page_size, n_kv, head_dim), jnp.int8)
+        cache["pages_v"] = jnp.zeros(
+            (n_pages, page_size, n_kv, head_dim), jnp.int8)
+        cache["scales_k"] = jnp.zeros(
+            (n_pages, page_size, n_kv), jnp.float32)
+        cache["scales_v"] = jnp.zeros(
+            (n_pages, page_size, n_kv), jnp.float32)
+    else:
+        cache["pages_k"] = jnp.zeros(
+            (n_pages, page_size, n_kv, head_dim), dtype)
+        cache["pages_v"] = jnp.zeros(
+            (n_pages, page_size, n_kv, head_dim), dtype)
+    return cache

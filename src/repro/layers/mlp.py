@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro import quant as quant_lib
 from repro.core import dyad as dyad_lib
 from repro.core import factory
 from repro.kernels import ops as kops
@@ -86,6 +87,35 @@ def _ff_kernel_ready(params, lin_cfg: factory.LinearCfg, act: str) -> bool:
     return ready
 
 
+def _ff_quant_ready(params, lin_cfg: factory.LinearCfg, act: str) -> bool:
+    """Route this ff module through the quantized-weight-stream kernels?
+    Needs the ``quant`` config opt-in ON TOP of the megakernel conditions,
+    plus the offline sidecar leaves on every projection
+    (``repro.quant.quantize_params``) — a param tree without them (training
+    params, fp checkpoints) silently keeps the fp routes.  Every decision
+    is counted under ``ff_quant`` (payload dtype vs ``off`` vs
+    ``fp_fallback``) so a config that silently loses the quantized stream
+    shows up in ``--metrics-json``."""
+    if not (lin_cfg.quant and lin_cfg.use_kernel and lin_cfg.fuse_ff_kernel):
+        return False
+    if not _ff_module_ok(params, act):
+        return False
+    if not quant_lib.enabled():
+        obs.route_event("ff_quant", "off", forced=True)
+        return False
+    if not quant_lib.ff_quantized(params):
+        obs.route_event("ff_quant", "fp_fallback")
+        return False
+    ctx = shard_ctx.current()
+    if ctx is not None and ctx.axis_size(ctx.model) > 1:
+        if not ktp.ff_tp_ready(params, ctx):
+            obs.route_event("ff_quant", "fp_fallback",
+                            tp=ctx.axis_size(ctx.model))
+            return False
+    obs.route_event("ff_quant", lin_cfg.quant)
+    return True
+
+
 def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
     """Mixed-variant fused ff: up=IT (strided view on the replicated input),
     down=OT (strided view on the reduced output) — the hidden stays in the
@@ -104,6 +134,14 @@ def _fused_dyad_mlp(params, x, lin_cfg: factory.LinearCfg, act: str):
 
 
 def apply_mlp(params, x, lin_cfg: factory.LinearCfg, *, act: str = "swiglu"):
+    if _ff_quant_ready(params, lin_cfg, act):
+        # quantized weight streams through the megakernel (or, under an
+        # active TP context, per-shard inside shard_map).  Forward-only:
+        # the quantized snapshot is frozen, nothing differentiates it.
+        ctx = shard_ctx.current()
+        if ctx is not None and ctx.axis_size(ctx.model) > 1:
+            return ktp.dyad_ff_quant_tp(params, x, act=act, ctx=ctx)
+        return kops.dyad_ff_quant(params, x, act=act)
     if _ff_kernel_ready(params, lin_cfg, act):
         # whole ff module in one Pallas grid; hidden never leaves VMEM.
         # Under tensor parallelism the same grid runs per-shard inside

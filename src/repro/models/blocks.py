@@ -207,9 +207,11 @@ def init_block_cache(cfg: ModelCfg, kind: str, batch: int, max_len: int,
     c = {}
     if kind in ("lm", "moe", "hybrid", "dec_cross"):
         if page_size is not None:
+            from repro import quant as quant_lib
+            kvq = cfg.kv_quant if quant_lib.enabled() else None
             c["kv"] = attn_lib.init_paged_kv_cache(
                 batch, max_len, cfg.n_kv_heads, cfg.hd, dtype,
-                page_size=page_size, n_pages=n_pages)
+                page_size=page_size, n_pages=n_pages, quant=kvq)
         else:
             # ring buffer when sliding-window attention bounds the reach
             L = min(max_len, cfg.window) if cfg.window else max_len

@@ -70,6 +70,12 @@ class ModelCfg:
     n_patches: int = 0
     # the paper's knob
     linear: factory.LinearCfg = factory.DENSE
+    # serving-only KV-cache quantization: "int8" stores paged K/V pools as
+    # int8 payloads with per-token-row fp32 scale pools; the paged decode
+    # kernel dequantizes tiles in-kernel after the block-table gather.
+    # None keeps the cache dtype the engine asks for.  Engines plumb this
+    # to init_paged_kv_cache; REPRO_KERNEL_QUANT=off disables it.
+    kv_quant: Optional[str] = None
     # precision & memory
     param_dtype: str = "float32"
     compute_dtype: str = "float32"

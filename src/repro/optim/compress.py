@@ -22,15 +22,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-
-def _quant_int8(g):
-    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def _dequant_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+# ONE symmetric-quant codec in the repo: the per-tensor int8 helpers now
+# live in repro.quant (which also provides the per-block weight / per-row
+# KV variants the serving kernels use) and are re-exported here for the
+# gradient compressor's historical import surface.
+from repro.quant import dequant_int8 as _dequant_int8  # noqa: F401
+from repro.quant import quant_int8 as _quant_int8  # noqa: F401
 
 
 def _topk_mask(g, frac: float):

@@ -45,8 +45,13 @@ DEFAULT_BLOCKS: Blocks = {"block_b": 256, "block_o": 256, "block_k": 512}
 DEFAULT_FF_BLOCKS: Blocks = {"block_b": 256, "block_o": 256,
                              "block_k": 512, "block_j": 512}
 
-# op keys that resolve 4-axis ff tiles (and carry d_mid in their cache key)
-FF_OPS = ("dyad_ff_fused", "dyad_ff_fused_swiglu")
+# op keys that resolve 4-axis ff tiles (and carry d_mid in their cache key).
+# The ``_w8`` variants are the quantized-weight-stream bodies: their key's
+# dtype field carries the PAYLOAD dtype (int8/float8_e4m3fn) — quantized
+# tiles stream 2-4x fewer bytes, so wider tiles fit the same VMEM budget
+# and the tuned entries must never collide with the unquantized ones.
+FF_OPS = ("dyad_ff_fused", "dyad_ff_fused_swiglu",
+          "dyad_ff_fused_w8", "dyad_ff_fused_swiglu_w8")
 
 # flash-attention op keys: ``block_b`` tiles q positions, ``block_k`` tiles
 # the streamed key axis; ``block_o`` is carried but unused (the head dim is
@@ -267,30 +272,49 @@ def get_tuned_blocks(op: str, B: int, n: int, d_in: int, d_out: int,
 
 
 def _dtype_bytes(dtype: str) -> int:
-    return {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}.get(dtype, 4)
+    """Bytes per element for VMEM budgeting.  Unknown dtypes RAISE: a
+    silent 4-byte default would let a quantized sweep admit tiles that
+    blow the real budget (or reject tiles that fit)."""
+    table = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1,
+             "float8_e4m3fn": 1, "float8_e5m2": 1}
+    try:
+        return table[dtype]
+    except KeyError:
+        raise ValueError(f"_dtype_bytes: unknown dtype {dtype!r} "
+                         f"(know {sorted(table)})") from None
 
 
 def vmem_estimate(bb: int, bo: int, bk: int, dtype: str,
-                  n_acc: int = 1, wgrad: bool = False) -> int:
+                  n_acc: int = 1, wgrad: bool = False,
+                  w_dtype: Optional[str] = None) -> int:
     """Double-buffered VMEM footprint of one grid step.
 
     Forward/dgrad tile roles: two (bb, bk) activation tiles + two (bo, bk)
     weight tiles streamed, n_acc (bb, bo) output tiles, fp32 accumulators of
     the same shape.  wgrad contracts the BATCH axis instead: two (bb, bk) x
     tiles + two (bb, bo) z tiles streamed, and the outputs/accumulators are
-    weight-shaped (bo, bk)."""
+    weight-shaped (bo, bk).
+
+    ``w_dtype`` (quantized forward only) prices the weight tiles at the
+    PAYLOAD dtype and adds the two double-buffered fp32 (bo,) scale tiles —
+    int8 streams admit wider tiles under the same budget."""
     ib = _dtype_bytes(dtype)
+    wb = ib if w_dtype is None else _dtype_bytes(w_dtype)
     if wgrad:
         stream = 2 * (2 * bb * bk + 2 * bb * bo + n_acc * bo * bk) * ib
         acc = 4 * n_acc * bo * bk
     else:
-        stream = 2 * (2 * bb * bk + 2 * bo * bk + n_acc * bb * bo) * ib
+        stream = 2 * (2 * bb * bk * ib + 2 * bo * bk * wb
+                      + n_acc * bb * bo * ib)
+        if w_dtype is not None:
+            stream += 2 * 2 * bo * 4
         acc = 4 * n_acc * bb * bo
     return stream + acc
 
 
 def vmem_estimate_ff(bb: int, bo: int, bk: int, bj: int, dtype: str,
-                     gated: bool = False) -> int:
+                     gated: bool = False,
+                     w_dtype: Optional[str] = None) -> int:
     """Double-buffered VMEM footprint of one ff-megakernel grid step.
 
     Streams: two (bb, bk) input tiles, the up (and, gated, gate) weight
@@ -298,11 +322,18 @@ def vmem_estimate_ff(bb: int, bo: int, bk: int, bj: int, dtype: str,
     tiles.  Resident fp32 accumulators: the (bb, bj) hidden tile (two when
     gated) plus the two (bb, bo) down tiles — three weight tensors and the
     in-VMEM hidden now share ONE budget, which is exactly why the ff ops
-    tune separately from the single-matmul kernels."""
+    tune separately from the single-matmul kernels.
+
+    ``w_dtype`` (the ``_w8`` ops) prices every weight tile at the PAYLOAD
+    dtype and adds the fp32 scale tiles ((bj,) per up tensor, (bo,) per
+    down)."""
     ib = _dtype_bytes(dtype)
+    wb = ib if w_dtype is None else _dtype_bytes(w_dtype)
     n_up = 4 if gated else 2
-    stream = 2 * (2 * bb * bk + n_up * bj * bk + 2 * bo * bj
-                  + 2 * bb * bo) * ib
+    stream = 2 * (2 * bb * bk * ib + n_up * bj * bk * wb
+                  + 2 * bo * bj * wb + 2 * bb * bo * ib)
+    if w_dtype is not None:
+        stream += 2 * (n_up * bj + 2 * bo) * 4
     acc = 4 * ((2 if gated else 1) * bb * bj + 2 * bb * bo)
     return stream + acc
 
@@ -357,9 +388,12 @@ def candidate_blocks_attn(S: int, T: int, h: int, g: int,
 
 def candidate_blocks_ff(B: int, n: int, d_in: int, d_out: int, d_ff: int,
                         dtype: str = "float32", gated: bool = False,
-                        max_candidates: int = 32) -> List[Blocks]:
+                        max_candidates: int = 32,
+                        w_dtype: Optional[str] = None) -> List[Blocks]:
     """Power-of-two 4-axis sweep for the ff megakernel, largest tiles first
-    (fewer grid steps), filtered by :func:`vmem_estimate_ff`."""
+    (fewer grid steps), filtered by :func:`vmem_estimate_ff` (quant sweeps
+    pass the payload ``w_dtype`` so the shrunken streams admit wider
+    tiles)."""
     bbs = [b for b in (512, 256, 128, 64) if b <= max(_next_pow2(B), 64)]
     bos = [b for b in (512, 256, 128) if b <= max(_next_pow2(d_out), 128)]
     bks = [b for b in (512, 256, 128) if b <= max(_next_pow2(d_in), 128)]
@@ -378,7 +412,8 @@ def candidate_blocks_ff(B: int, n: int, d_in: int, d_out: int, d_ff: int,
         seen.add(sig)
         if vmem_estimate_ff(cand["block_b"], cand["block_o"],
                             cand["block_k"], cand["block_j"], dtype,
-                            gated=gated) > VMEM_BUDGET_BYTES:
+                            gated=gated,
+                            w_dtype=w_dtype) > VMEM_BUDGET_BYTES:
             continue
         out.append(dict(cand))
         if len(out) >= max_candidates:
@@ -389,7 +424,8 @@ def candidate_blocks_ff(B: int, n: int, d_in: int, d_out: int, d_ff: int,
 def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
                      dtype: str = "float32", n_acc: int = 1,
                      wgrad: bool = False,
-                     max_candidates: int = 32) -> List[Blocks]:
+                     max_candidates: int = 32,
+                     w_dtype: Optional[str] = None) -> List[Blocks]:
     """Power-of-two tile sweep clamped to the (bucketed) dims and filtered
     by the VMEM budget.  Always contains the hardcoded default."""
     bbs = [b for b in (64, 128, 256, 512) if b <= max(_next_pow2(B), 64)]
@@ -404,8 +440,8 @@ def candidate_blocks(B: int, n: int, d_in: int, d_out: int,
         if sig in seen:
             continue
         seen.add(sig)
-        if vmem_estimate(*sig, dtype=dtype, n_acc=n_acc,
-                         wgrad=wgrad) > VMEM_BUDGET_BYTES:
+        if vmem_estimate(*sig, dtype=dtype, n_acc=n_acc, wgrad=wgrad,
+                         w_dtype=w_dtype) > VMEM_BUDGET_BYTES:
             continue
         out.append(dict(cand))
         if len(out) >= max_candidates:
@@ -436,6 +472,12 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     width d_ff/n as ``d_mid``; ``act`` picks the timed epilogue), or
     ``"dense_bmm"`` (the baseline).  ``(B, n, d_in, d_out)`` always names
     the LAYER-natural dims, the same key the trace-time lookup uses.
+
+    The ``_w8`` suffix on a forward op (``dyad_mm_blocks[_two]_w8``,
+    ``dyad_ff_fused[_swiglu]_w8``) sweeps the quantized-weight-stream body:
+    ``dtype`` then names the PAYLOAD dtype ("int8"/"float8_e4m3fn" — the
+    field the kernel wrappers key on) while activations run in bf16, the
+    serving compute dtype.
     Returns ``(blocks, best_us)``.  A cache hit short-circuits the sweep
     unless ``force=True``.
     """
@@ -529,12 +571,16 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
                   candidates=len(deduped))
         return best, best_us
 
-    kd = jnp.dtype(dtype)
+    quant = op.endswith("_w8")
+    kd = jnp.dtype(jnp.bfloat16) if quant else jnp.dtype(dtype)
     kx = jax.random.PRNGKey(0)
     x1 = jax.random.normal(kx, (B, n, d_in), kd)
     x2 = jax.random.normal(jax.random.fold_in(kx, 1), (B, n, d_in), kd)
     w1 = jax.random.normal(jax.random.fold_in(kx, 2), (n, d_out, d_in), kd)
     w2 = jax.random.normal(jax.random.fold_in(kx, 3), (n, d_out, d_in), kd)
+    if quant:
+        from repro import quant as quant_lib
+        quant_lib.resolve_dtype(dtype)    # payload name must be quantizable
 
     if op == "dense_bmm":
         # the baseline has no tile knobs; record its time under the default
@@ -549,11 +595,12 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
     from repro.kernels import dyad_mm
     from repro.kernels.ops import _interpret
 
-    n_acc = 1 if op in ("dyad_mm_blocks", "dyad_mm_dgrad") else 2
+    n_acc = 1 if op in ("dyad_mm_blocks", "dyad_mm_blocks_w8",
+                        "dyad_mm_dgrad") else 2
     interpret = _interpret()
 
     if op in FF_OPS:
-        gated = op.endswith("swiglu")
+        gated = "swiglu" in op
         kact = "swiglu" if gated else act
         wu1 = jax.random.normal(jax.random.fold_in(kx, 4), (n, d_mid, d_in),
                                 kd)
@@ -569,12 +616,28 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
                                               (n, d_mid, d_in), kd),
                      "wg2": jax.random.normal(jax.random.fold_in(kx, 9),
                                               (n, d_mid, d_in), kd)}
-        kernel = lambda **c: dyad_mm.dyad_ff_fused(
-            x1, x2, wu1, wu2, wd1, wd2, act=kact, interpret=interpret,
-            **gates, **c)
+        if quant:
+            (wu1, su1), (wu2, su2), (wd1, sd1), (wd2, sd2) = (
+                quant_lib.quantize_dyad_weight(w, dtype)
+                for w in (wu1, wu2, wd1, wd2))
+            if gated:
+                wg1, sg1 = quant_lib.quantize_dyad_weight(gates["wg1"],
+                                                          dtype)
+                wg2, sg2 = quant_lib.quantize_dyad_weight(gates["wg2"],
+                                                          dtype)
+                gates = {"wg1": wg1, "wg2": wg2, "sg1": sg1, "sg2": sg2}
+            kernel = lambda **c: dyad_mm.dyad_ff_fused_q(
+                x1, x2, wu1, wu2, wd1, wd2, su1, su2, sd1, sd2, act=kact,
+                interpret=interpret, **gates, **c)
+        else:
+            kernel = lambda **c: dyad_mm.dyad_ff_fused(
+                x1, x2, wu1, wu2, wd1, wd2, act=kact, interpret=interpret,
+                **gates, **c)
         cands = (list(candidates) if candidates is not None
-                 else candidate_blocks_ff(B, n, d_in, d_out, d_mid, dtype,
-                                          gated=gated))
+                 else candidate_blocks_ff(
+                     B, n, d_in, d_out, d_mid,
+                     str(kd) if quant else dtype, gated=gated,
+                     w_dtype=dtype if quant else None))
         seen_plans = set()
         deduped = []
         for cand in cands:
@@ -608,6 +671,15 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
             x1, x2, z1, z2, interpret=interpret, **c)
         plan_dims = (B, d_out, d_in)
         cand_dims = (d_in, d_out)
+    elif quant:
+        kfn = {"dyad_mm_blocks_w8": dyad_mm.dyad_mm_blocks_q,
+               "dyad_mm_blocks_two_w8": dyad_mm.dyad_mm_blocks_two_q}[op]
+        w1q, s1 = quant_lib.quantize_dyad_weight(w1, dtype)
+        w2q, s2 = quant_lib.quantize_dyad_weight(w2, dtype)
+        kernel = lambda **c: kfn(x1, x2, w1q, w2q, s1, s2,
+                                 interpret=interpret, **c)
+        plan_dims = (B, d_out, d_in)
+        cand_dims = (d_in, d_out)
     else:
         kfn = {"dyad_mm_blocks": dyad_mm.dyad_mm_blocks,
                "dyad_mm_blocks_two": dyad_mm.dyad_mm_blocks_two}[op]
@@ -616,8 +688,9 @@ def autotune_dyad(op: str, B: int, n: int, d_in: int, d_out: int,
         cand_dims = (d_in, d_out)
 
     cands = list(candidates) if candidates is not None else candidate_blocks(
-        B, n, cand_dims[0], cand_dims[1], dtype, n_acc=n_acc,
-        wgrad=(op == "dyad_mm_wgrad"))
+        B, n, cand_dims[0], cand_dims[1], str(kd) if quant else dtype,
+        n_acc=n_acc, wgrad=(op == "dyad_mm_wgrad"),
+        w_dtype=dtype if quant else None)
     # distinct requested blocks can clamp to identical EFFECTIVE tiles for
     # this concrete shape — timing those again only measures noise
     seen_plans = set()
@@ -854,14 +927,25 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
                     tuned[tune_key("flash_decode", rows, kvh, hd, L,
                                    dtype, d_mid=g)] = blocks
     variant = getattr(cfg.linear, "variant", "it")
+    # quantized serving tunes the _w8 op keys too: their key dtype is the
+    # PAYLOAD dtype (the field the kernel wrappers resolve on)
+    qdt = None
+    if getattr(cfg.linear, "quant", None):
+        from repro import quant as quant_lib
+
+        if quant_lib.enabled():
+            qdt = str(quant_lib.resolve_dtype(cfg.linear.quant)[0])
     for n, d_in, d_out in model_dyad_shapes(cfg):
         ops = ["dyad_mm_blocks" if variant == "it" else "dyad_mm_blocks_two"]
+        if qdt is not None:
+            ops.append(ops[0] + "_w8")
         if include_bwd:
             ops += bwd_ops_for_variant(variant)
         for op in ops:
-            blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dtype,
+            dt = qdt if op.endswith("_w8") else dtype
+            blocks, _ = autotune_dyad(op, tokens, n, d_in, d_out, dt,
                                       iters=iters)
-            tuned[tune_key(op, tokens, n, d_in, d_out, dtype)] = blocks
+            tuned[tune_key(op, tokens, n, d_in, d_out, dt)] = blocks
     ff = model_ff_fused_shape(cfg)
     if ff is not None and tp > 1:
         from repro.kernels import tp as ktp
@@ -878,6 +962,11 @@ def ensure_tuned_for_model(cfg, tokens: int, *, dtype: Optional[str] = None,
             blocks, _ = autotune_dyad(op, rows, n, k, k, dtype, d_mid=j,
                                       act=mact, iters=iters)
             tuned[tune_key(op, rows, n, k, k, dtype, d_mid=j)] = blocks
+            if qdt is not None:
+                blocks, _ = autotune_dyad(op + "_w8", rows, n, k, k, qdt,
+                                          d_mid=j, act=mact, iters=iters)
+                tuned[tune_key(op + "_w8", rows, n, k, k, qdt,
+                               d_mid=j)] = blocks
             if include_bwd:
                 # the megakernel VJP composes the existing bwd kernels; the
                 # main loop above already tunes them at both ff shapes

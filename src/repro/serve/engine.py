@@ -522,9 +522,13 @@ class ContinuousBatchingEngine:
 
         def chunk(params, cache, tokens, bt_row, pos, key):
             kv = cache["kv"]
+            # every pool leaf rides the view (scales_k/scales_v exist only
+            # for int8-quantized pools) so chunked prefill writes quantized
+            # pages exactly like the decode path
+            pools = [nm for nm in ("pages_k", "pages_v", "scales_k",
+                                   "scales_v") if nm in kv]
             view = {"kv": {
-                "pages_k": kv["pages_k"],
-                "pages_v": kv["pages_v"],
+                **{nm: kv[nm] for nm in pools},
                 "block_table": jnp.broadcast_to(
                     bt_row[None, None], (n_layers, 1) + bt_row.shape),
                 "idx": jnp.full((n_layers, 1), pos, jnp.int32),
@@ -534,8 +538,8 @@ class ContinuousBatchingEngine:
                                key if temperature > 0.0 else None)
             new_cache = dict(cache)
             new_cache["kv"] = dict(kv)
-            new_cache["kv"]["pages_k"] = view["kv"]["pages_k"]
-            new_cache["kv"]["pages_v"] = view["kv"]["pages_v"]
+            for nm in pools:
+                new_cache["kv"][nm] = view["kv"][nm]
             return tok.astype(jnp.int32), new_cache
 
         self._chunk_fns[chunk_len] = jax.jit(chunk)

@@ -101,7 +101,15 @@ def param_spec(path, leaf, rules: MeshRules, axis_sizes=None) -> P:
     is_expert = "experts" in parts
     parent = next((p for p in reversed(parts)
                    if p in UP_NAMES + DOWN_NAMES), None)
-    is_dyad = parts[-1] in ("w1", "w2")
+    is_dyad = parts[-1] in ("w1", "w2", "w1_q", "w2_q")
+
+    if parts[-1] in ("w1_s", "w2_s") and ndim == 2:
+        # quantized-sidecar scales (n_dyad, d_out): follow the PAYLOAD's
+        # out axis — up-type splits d_out over model, down-type replicates
+        # (the down payload shards its d_in; its out rows stay whole).
+        if parent in DOWN_NAMES:
+            return done([None, None])
+        return done([None, m])
 
     if parts[-1] == "table":
         # (vocab, d_model): vocab over model (Megatron), d over fsdp
@@ -186,6 +194,14 @@ def cache_shardings(mesh, cache_specs, rules: MeshRules):
             # kv heads shard over model when divisible, so the per-device
             # pool shrinks with TP exactly like the dense rings — and
             # matches the per-shard head slice kernels.tp dispatches on.
+            spec[1] = None
+            if leaf.shape[3] % msize == 0:
+                spec[3] = rules.model
+            return NamedSharding(mesh, P(*_guard(spec, leaf.shape, sizes)))
+        if leafname in ("scales_k", "scales_v") and nd == 4:
+            # (L, NP, P, K) quantized-pool scale pools: same page-axis
+            # contract as pages_k/pages_v, kv heads over model (axis 3 is
+            # the head axis here — no trailing head_dim).
             spec[1] = None
             if leaf.shape[3] % msize == 0:
                 spec[3] = rules.model
