@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro import configs, perf
+from repro import configs, faults, perf
 from repro.models import model
 from repro.serve import ContinuousBatchingEngine, Engine, prefill_tokenwise
 
@@ -168,6 +168,24 @@ def _bench_continuous() -> None:
          kv_rows=CB_DENSE_SLOTS * CB_MAX_LEN,
          capacity_vs_dense=round(conc_p / conc_d, 2),
          tok_s_vs_dense=round(t_d / t_p, 2))
+
+    # degraded mode: the SAME paged trace under 5% injected page exhaustion
+    # (repro.faults) — quantifies the throughput cost of admission backoff +
+    # retry when the pool misbehaves.  All requests still complete; the
+    # tok_s_vs_clean ratio is the resilience overhead cell.
+    faults.configure("page_exhaustion:p=0.05", seed=0)
+    try:
+        t_f, total_f, conc_f, _ = timed(lambda: ContinuousBatchingEngine(
+            cfg, params, n_slots=CB_PAGED_SLOTS, max_len=CB_MAX_LEN,
+            page_size=CB_PAGE,
+            n_pages=1 + CB_DENSE_SLOTS * CB_MAX_LEN // CB_PAGE), prompts)
+        fsnap = faults.snapshot()["page_exhaustion"]
+    finally:
+        faults.configure(None)
+    emit(f"serve_cb_paged_degraded_p{CB_PAGE}_s{CB_PAGED_SLOTS}", t_f * 1e6,
+         shape=(CB_REQUESTS, CB_MAX_LEN), tok_s=round(total_f / t_f),
+         max_concurrent=conc_f, faults_fired=fsnap["fired"],
+         tok_s_vs_clean=round((total_f / t_f) / (total / t_p), 2))
 
     # prefix caching: the same trace behind a shared 16-token system prompt
     system = rng.integers(0, cfg.vocab_size, 2 * CB_PAGE).astype(np.int32)

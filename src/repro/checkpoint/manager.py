@@ -13,6 +13,12 @@ blocked by serialization); ``wait()`` joins before exit/next save.
 Restore is **template-addressed**: arrays are matched to the target pytree by
 key-path, so restoring into a model re-built under a *different mesh* (elastic
 scaling) or into a partially-changed pytree (added buffers) is well-defined.
+
+Writes retry with exponential backoff (transient I/O errors — and the
+``ckpt_io`` fault site — are absorbed up to ``retries`` times); a write that
+exhausts the budget raises :class:`repro.errors.CheckpointIOError`.  Async
+save failures are captured on the worker thread and re-raised at the next
+``wait()``/``save()`` — they can not vanish silently.
 """
 from __future__ import annotations
 
@@ -20,10 +26,14 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Optional
 
 import jax
 import numpy as np
+
+from repro import faults, obs
+from repro.errors import CheckpointIOError
 
 
 def _path_str(path) -> str:
@@ -44,11 +54,16 @@ def flatten_with_paths(tree) -> dict:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 async_save: bool = True, retries: int = 3,
+                 backoff_s: float = 0.05):
         self.directory = directory
         self.keep_n = keep_n
         self.async_save = async_save
+        self.retries = retries
+        self.backoff_s = backoff_s
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -58,12 +73,41 @@ class CheckpointManager:
         self.wait()
         if self.async_save and not blocking:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write_async, args=(step, host), daemon=True)
             self._thread.start()
         else:
             self._write(step, host)
 
+    def _write_async(self, step: int, host: dict):
+        try:
+            self._write(step, host)
+        except BaseException as e:        # surfaces at the next wait()
+            self._error = e
+
     def _write(self, step: int, host: dict):
+        """Write with retry/backoff; raises :class:`CheckpointIOError` only
+        after ``retries`` extra attempts all fail."""
+        delay = self.backoff_s
+        for attempt in range(self.retries + 1):
+            try:
+                self._write_once(step, host)
+                return
+            except (OSError, CheckpointIOError) as e:
+                obs.instant("ckpt_retry", cat="train", step=step,
+                            attempt=attempt, error=str(e))
+                if attempt == self.retries:
+                    raise CheckpointIOError(
+                        f"checkpoint step {step} failed after "
+                        f"{attempt + 1} attempts: {e}") from e
+                time.sleep(delay)
+                delay *= 2
+
+    def _write_once(self, step: int, host: dict):
+        # the fault site sits INSIDE the retry loop, so each attempt
+        # re-draws — an injected transient clears exactly like a real one
+        if faults.active() and faults.fire("ckpt_io"):
+            raise CheckpointIOError(
+                f"checkpoint step {step} write failed (injected)")
         final = os.path.join(self.directory, f"ckpt_{step}")
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
@@ -87,9 +131,14 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure if it had
+        one (an async write error must never be lost)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     # -- restore ------------------------------------------------------------
     def all_steps(self):

@@ -1,0 +1,56 @@
+"""Typed exception hierarchy for the serving / training / checkpoint stack.
+
+Every raise that a caller might want to catch-and-recover from carries a
+dedicated type rooted at :class:`ReproError`.  The concrete classes ALSO
+subclass the builtin the pre-PR-10 code raised at the same site
+(``AdmissionError`` is a ``ValueError``, ``PageExhausted`` a
+``RuntimeError``, ...), so existing ``except ValueError`` callers and the
+seed-era tests keep working while new code can discriminate precisely.
+
+The resilience layer (:mod:`repro.faults`, the continuous engine's
+preemption/deadline machinery, the trainer's NaN backoff, the checkpoint
+retry loop) raises exclusively from this module.
+"""
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Root of every typed error the repro stack raises deliberately."""
+
+
+class AdmissionError(ReproError, ValueError):
+    """A request can never be admitted: prompt + budget exceeds the cache
+    length, the page pool could never hold it, or the parameters are
+    malformed (``max_new < 1``).  Raised by ``submit`` before queueing —
+    an admitted request never hits this."""
+
+
+class DeadlineExceeded(ReproError, TimeoutError):
+    """A deadline expired: ``ContinuousBatchingEngine.run(deadline_s=...)``
+    overran its drain budget.  Per-request deadlines do NOT raise — they
+    retire the request with ``RetireReason.DEADLINE``."""
+
+
+class NumericalFault(ReproError, ArithmeticError):
+    """Non-finite values survived every recovery rung: the trainer saw K
+    consecutive non-finite steps with no checkpoint to roll back to, or a
+    caller asked for strict numerics.  The serving engine never raises
+    this — it retires the affected requests with ``RetireReason.FAULTED``
+    instead."""
+
+
+class CheckpointIOError(ReproError, RuntimeError):
+    """A checkpoint write failed after exhausting the retry/backoff budget
+    (or an async save failed and surfaced at ``wait()``)."""
+
+
+class PageExhausted(ReproError, RuntimeError):
+    """``PageAllocator.alloc`` found no free page (for real, or via the
+    ``page_exhaustion`` fault site).  The continuous engine treats it as
+    pool pressure: roll back the partial admission and retry/preempt."""
+
+
+class PageAccountingError(ReproError, ValueError):
+    """A page-refcount invariant was about to be violated: double release,
+    retain of a free page, or a free-list page with a live refcount.
+    Raising loudly here is the guard against silent KV corruption."""

@@ -57,7 +57,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro.kernels import flash_attn, ref
 from repro.kernels.dyad_mm import (dyad_ff_fused, dyad_ff_fused_q,
                                    dyad_mm_blocks, dyad_mm_blocks_q,
@@ -275,7 +275,8 @@ def _ff_forward(x, wg, wu, wd, act):
     wd1, wd2 = (w.astype(dt) for w in wd)
     x1, x2 = ref.block_views(x2d, n, "it")
     interpret = _interpret()
-    if _ff_route() == "fused":
+    route = _ff_route()
+    if route == "fused":
         wg1, wg2 = (w.astype(dt) for w in wg) if wg is not None else (None,
                                                                       None)
         z1, z2 = dyad_ff_fused(x1, x2, wu1, wu2, wd1, wd2, wg1=wg1, wg2=wg2,
@@ -290,6 +291,10 @@ def _ff_forward(x, wg, wu, wd, act):
             h = ref.ACTS[act](u)
         z1, z2 = dyad_mm_blocks_two(h, h, wd1, wd2, interpret=interpret)
     y = ref.combine(z1, z2, "ot")
+    # chaos hook: ``kernel_nan`` with route=ff_fused / ff_split simulates a
+    # numerically-broken kernel on the active route (trace-time; no-op
+    # unless a fault schedule is armed)
+    y = faults.poison(y, "kernel_nan", route=f"ff_{route}")
     return y.reshape(*lead, n * d_out)
 
 

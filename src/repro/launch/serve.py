@@ -29,7 +29,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs, obs
+from repro import configs, faults, obs
 from repro.checkpoint import CheckpointManager
 from repro.models import model
 from repro.serve import ContinuousBatchingEngine, Engine
@@ -76,6 +76,15 @@ def main():
     ap.add_argument("--report-every", type=float, default=None,
                     metavar="SECONDS",
                     help="continuous engine: periodic one-line stats report")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault-injection schedule, e.g. 'page_exhaustion:"
+                         "p=0.05;nan_logits:at_step=3;slow_step:ms=50' "
+                         "(overrides REPRO_FAULT; see repro.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="continuous engine: per-request wall-clock budget; "
+                         "expired requests retire with reason=deadline "
+                         "keeping their partial output")
     ap.add_argument("--tp", type=int, default=1,
                     help="shard the model axis over this many devices: "
                          "dispatches the shard_map TP kernels "
@@ -107,6 +116,8 @@ def main():
 
     if args.trace:
         obs.enable()
+    if args.faults:
+        faults.configure(args.faults, seed=args.fault_seed)
 
     # engines capture the ambient mesh at construction (per-shard autotune
     # keys) and the layer dispatch consults it at trace time, so the whole
@@ -163,7 +174,8 @@ def _run(args):
                                cfg.vocab_size)
             for i in range(args.requests)]
         t0 = time.perf_counter()
-        uids = [engine.submit(p, args.new_tokens) for p in prompts]
+        uids = [engine.submit(p, args.new_tokens,
+                              deadline_s=args.deadline_s) for p in prompts]
         results = engine.run()
         dt = time.perf_counter() - t0
         total = sum(len(results[u]) for u in uids)
@@ -172,6 +184,9 @@ def _run(args):
               f"({total / dt:.1f} tok/s)")
         if engine.paged:
             print(f"[serve] paged: {engine.stats}")
+        if faults.active():
+            print(f"[serve] faults: {faults.snapshot()} "
+                  f"demoted={engine.demoted}")
         print({u: results[u][:8] for u in uids[:4]})
         print(f"[serve] summary: {engine.format_summary()}")
         _finish(args, engine.metrics)
@@ -202,7 +217,8 @@ def _finish(args, metrics):
     if args.metrics_json:
         # route-dispatch counters ride along: ff_tp/attn_tp tp_fused vs
         # tp_fallback make a silently lost kernel route visible here.
-        metrics.write_json(args.metrics_json, routes=obs.routes_snapshot())
+        metrics.write_json(args.metrics_json, routes=obs.routes_snapshot(),
+                           faults=faults.snapshot())
         print(f"[serve] metrics: {args.metrics_json}")
     if args.trace:
         t = obs.get_tracer()

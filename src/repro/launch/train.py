@@ -14,10 +14,11 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import signal
 
 import jax
 
-from repro import configs, obs
+from repro import configs, faults, obs
 from repro.data import SyntheticLM
 from repro.optim import AdamW, Compressor, schedule
 from repro.train import Trainer, init_train_state, make_train_step
@@ -42,6 +43,14 @@ def main():
                          "export Chrome-trace JSON here (ui.perfetto.dev)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the final training metrics snapshot as JSON")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="fault-injection schedule, e.g. "
+                         "'nan_loss:at_step=5;ckpt_io:p=0.3;slow_step:ms=20' "
+                         "(overrides REPRO_FAULT; see repro.faults)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--nan-strikes", type=int, default=3,
+                    help="consecutive non-finite steps before rolling back "
+                         "to the last checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--autotune", action="store_true",
                     help="pre-tune Pallas kernel tiles (forward AND the "
@@ -54,6 +63,8 @@ def main():
 
     if args.trace:
         obs.enable()
+    if args.faults:
+        faults.configure(args.faults, seed=args.fault_seed)
 
     linear = configs.linear_cfg(args.linear) if args.linear else None
     cfg = configs.get(args.arch, smoke=args.smoke, linear=linear)
@@ -85,11 +96,19 @@ def main():
                    donate_argnums=0)
 
     trainer = Trainer(step, state, data, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every, log_every=10)
-    trainer.install_preemption_handler()
+                      ckpt_every=args.ckpt_every, log_every=10,
+                      nan_strikes=args.nan_strikes)
+    # SIGTERM (spot reclaim / scheduler) AND SIGINT (operator ctrl-C) both
+    # end the run through the same path: finish the in-flight step, write a
+    # final blocking checkpoint, exit 0 — the next launch auto-resumes.
+    trainer.install_preemption_handler(
+        signals=(signal.SIGTERM, signal.SIGINT))
     _, metrics = trainer.run(args.steps)
-    print(f"[train] done at step {trainer.step}: "
-          f"loss={float(metrics['loss']):.4f} "
+    if trainer._preempted:
+        print(f"[train] preempted at step {trainer.step}: checkpoint saved, "
+              "relaunch to resume")
+    loss = float(metrics["loss"]) if "loss" in metrics else float("nan")
+    print(f"[train] done at step {trainer.step}: loss={loss:.4f} "
           f"stragglers={len(trainer.straggler_events)}")
     snap = trainer.metrics.snapshot()
     h = snap["histograms"].get("step_time_s")
@@ -99,7 +118,8 @@ def main():
               f"tok/s={snap['gauges'].get('tokens_per_s', {}).get('value', 0):.0f} "
               f"stragglers={snap['counters'].get('straggler_count', 0)}")
     if args.metrics_json:
-        trainer.metrics.write_json(args.metrics_json)
+        trainer.metrics.write_json(args.metrics_json,
+                                   faults=faults.snapshot())
         print(f"[train] metrics: {args.metrics_json}")
     if args.trace:
         obs.export(args.trace)

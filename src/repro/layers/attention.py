@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro.core import factory
 from repro.kernels import ops as kops
 from repro.kernels import tp as ktp
@@ -472,6 +472,10 @@ def attention(
         o = _chunked_sdpa(qg, k, v, qpos, kpos, causal, window, chunk)
     else:
         o = _naive_sdpa(qg, k, v, qpos, kpos, causal, window)
+    if use_flash:
+        # chaos hook: kernel_nan route=attn_flash simulates a broken flash
+        # kernel; demotion to REPRO_KERNEL_ATTN=xla re-traces off it
+        o = faults.poison(o, "kernel_nan", route="attn_flash")
     o = o.reshape(B, S, n_heads * head_dim)
     out = factory.apply(params["wo"], o, lin_cfg, site="attn")
     return out, new_cache

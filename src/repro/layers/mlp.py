@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro import quant as quant_lib
 from repro.core import dyad as dyad_lib
 from repro.core import factory
@@ -140,8 +140,12 @@ def apply_mlp(params, x, lin_cfg: factory.LinearCfg, *, act: str = "swiglu"):
         # the quantized snapshot is frozen, nothing differentiates it.
         ctx = shard_ctx.current()
         if ctx is not None and ctx.axis_size(ctx.model) > 1:
-            return ktp.dyad_ff_quant_tp(params, x, act=act, ctx=ctx)
-        return kops.dyad_ff_quant(params, x, act=act)
+            y = ktp.dyad_ff_quant_tp(params, x, act=act, ctx=ctx)
+        else:
+            y = kops.dyad_ff_quant(params, x, act=act)
+        # chaos hook: kernel_nan route=ff_quant models corrupt quantized
+        # blocks — the serving demotion ladder's first rung (quant -> fp)
+        return faults.poison(y, "kernel_nan", route="ff_quant")
     if _ff_kernel_ready(params, lin_cfg, act):
         # whole ff module in one Pallas grid; hidden never leaves VMEM.
         # Under tensor parallelism the same grid runs per-shard inside

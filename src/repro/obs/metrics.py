@@ -170,7 +170,9 @@ def format_serving_line(m: MetricsRegistry) -> str:
             f"pages={pool['value']}/{pool['max']}peak "
             f"prefix_hits={c.get('prefix_hits', 0)} "
             f"prefix_tok_skipped={c.get('prefix_tokens_skipped', 0)} "
-            f"rejects={c.get('admission_rejects', 0)}")
+            f"rejects={c.get('admission_rejects', 0)} "
+            f"preempts={c.get('preemptions', 0)} "
+            f"faulted={c.get('retired_faulted', 0)}")
 
 
 def format_training_line(m: MetricsRegistry, step: int,

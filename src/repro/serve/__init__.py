@@ -6,6 +6,7 @@ from repro.serve.engine import (  # noqa: F401
     Engine,
     PageAllocator,
     Request,
+    RetireReason,
     SlotManager,
     make_serve_step,
     prefill,

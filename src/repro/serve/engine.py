@@ -41,11 +41,25 @@ block tables / write indices are re-pushed from HOST truth before every
 batch decode step, with non-decoding lanes pointed at the reserved scratch
 page 0 — their garbage writes can never corrupt live pages.
 ``REPRO_PAGED_KV=off`` is the escape hatch back to dense rings.
+
+Resilience (PR 10): requests carry optional **deadlines** and can be
+**cancelled**; every retirement records a typed :class:`RetireReason`.
+Under page-pool pressure the paged engine **preempts a victim** (youngest
+non-prefix-shared decoding slot: pages released, request re-queued with its
+generated-so-far tokens for a cheap re-prefill) instead of head-of-line
+blocking forever.  A jit-compatible **NaN/Inf guard** on the decode logits
+drives a route **demotion ladder** (quant -> fp, fused -> split, flash ->
+xla, via the existing ``REPRO_KERNEL_*`` escape hatches + a re-jit) with a
+same-route retry first, so a transient fault never demotes; requests whose
+logits stay non-finite after the full ladder retire as ``FAULTED``.  All of
+it is driven deterministically by :mod:`repro.faults`
+(``REPRO_FAULT="page_exhaustion:p=0.05;nan_logits:at_step=3"``).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import enum
 import functools
 import hashlib
 import itertools
@@ -57,7 +71,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import obs
+from repro import faults, obs
+from repro.errors import (AdmissionError, DeadlineExceeded,
+                          PageAccountingError, PageExhausted)
 from repro.models import model
 from repro.models.config import ModelCfg
 from repro.sharding import ctx as shard_ctx
@@ -258,21 +274,50 @@ class Engine:
 # ---------------------------------------------------------------------------
 # continuous batching
 # ---------------------------------------------------------------------------
+class RetireReason(str, enum.Enum):
+    """Why a request left its slot.  ``PREEMPTED`` is transient (the request
+    re-queues and later retires with a terminal reason); the rest are
+    terminal.  The engine counts one ``retired_<reason>`` metric per
+    terminal retirement plus a ``preemptions`` counter."""
+    EOS = "eos"
+    MAX_NEW = "max_new"
+    DEADLINE = "deadline"
+    CANCELLED = "cancelled"
+    PREEMPTED = "preempted"
+    FAULTED = "faulted"
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request moving through the continuous-batching engine.
 
     ``tokens`` accumulates generated ids (the prompt is not echoed); the
-    request is finished when EOS is sampled or ``max_new`` tokens exist."""
+    request is finished when EOS is sampled or ``max_new`` tokens exist.
+    ``deadline_s`` is a wall-clock budget measured from submit; expiry
+    retires the request with ``RetireReason.DEADLINE`` (partial output
+    kept).  After a preemption, ``resume_token`` holds the last emitted
+    token — re-admission prefills ``prompt + tokens[:-1]`` and seeds decode
+    with it instead of re-sampling (so a preempted greedy request's output
+    is identical to an undisturbed run)."""
     uid: int
     prompt: np.ndarray          # (S,) int32
     max_new: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
+    deadline_s: Optional[float] = None   # seconds from submit; None = no limit
+    retire_reason: Optional[RetireReason] = None
+    preemptions: int = 0
+    resume_token: Optional[int] = None   # set while re-queued after preemption
+    admit_seq: int = -1                  # admission order (victim picking)
     # telemetry timestamps (perf_counter seconds); 0.0 = not yet reached
     t_submit: float = 0.0
     t_first: float = 0.0        # first generated token (TTFT endpoint)
     t_done: float = 0.0
+
+    @property
+    def expired(self) -> bool:
+        return (self.deadline_s is not None
+                and time.perf_counter() - self.t_submit > self.deadline_s)
 
 
 class SlotManager:
@@ -329,22 +374,33 @@ class PageAllocator:
         return len(self._free)
 
     def alloc(self) -> int:
+        if faults.active() and faults.fire("page_exhaustion"):
+            raise PageExhausted("page pool exhausted (injected)")
         if not self._free:
-            raise RuntimeError("page pool exhausted")
+            raise PageExhausted("page pool exhausted")
         page = self._free.pop()
-        assert self.refcount[page] == 0, f"page {page} handed out twice"
+        if self.refcount[page] != 0:
+            # a free-list page with a live refcount means the accounting is
+            # already corrupt — refuse to hand it out a second time
+            raise PageAccountingError(
+                f"free-list page {page} has refcount "
+                f"{int(self.refcount[page])}")
         self.refcount[page] = 1
         return page
 
     def retain(self, page: int) -> None:
         if not 1 <= page < self.n_pages or self.refcount[page] <= 0:
-            raise ValueError(f"retain of unallocated page {page}")
+            raise PageAccountingError(
+                f"retain of unallocated page {page} (refcount "
+                f"{int(self.refcount[page]) if 0 <= page < self.n_pages else 'oob'})")
         self.refcount[page] += 1
 
     def release(self, page: int) -> bool:
         """Drop one reference; True when the page went back to the pool."""
         if not 1 <= page < self.n_pages or self.refcount[page] <= 0:
-            raise ValueError(f"release of unallocated page {page}")
+            raise PageAccountingError(
+                f"release of unallocated page {page}: double release or "
+                "stale block-table entry")
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
             self._free.append(page)
@@ -388,6 +444,8 @@ class ContinuousBatchingEngine:
                  n_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
+                 nan_guard: bool = True,
+                 preempt: bool = True,
                  report_every_s: Optional[float] = None,
                  log_fn: Callable = print):
         if cfg.family in ("vlm", "encdec"):
@@ -452,18 +510,41 @@ class ContinuousBatchingEngine:
         self._key = jax.random.PRNGKey(seed)
         self._clock = 0
         self._prefills: Dict[int, callable] = {}
+        # resilience state: NaN guard + demotion ladder + victim preemption
+        self.nan_guard = bool(nan_guard)
+        self.preempt_enabled = bool(preempt)
+        self._admit_seq = itertools.count()
+        # demotion rungs in order; each entry = (name, env var, demoted
+        # value).  _demote() sets the env var and re-jits, so the next
+        # trace-time route decision lands one rung lower.
+        self._ladder = [("quant", "REPRO_KERNEL_QUANT", "off"),
+                        ("ff", "REPRO_KERNEL_FF", "split"),
+                        ("attn", "REPRO_KERNEL_ATTN", "xla")]
+        self.demoted: List[str] = []
+        self._env_before: Dict[str, Optional[str]] = {}
         self._batch_step = jax.jit(self._make_batch_step())
         self._write_slot = jax.jit(self._write_slot_impl)
 
     # -- jitted pieces ------------------------------------------------------
     def _make_batch_step(self):
         cfg, temperature = self.cfg, self.temperature
+        guard = self.nan_guard
 
-        def batch_step(params, cache, tok, key):
+        def batch_step(params, cache, tok, key, poison):
             logits, cache = model.decode_step(cfg, params, cache, tok)
+            # ``poison`` is the nan_logits fault-injection flag (a traced
+            # scalar, so one compilation covers clean and poisoned steps)
+            logits = jnp.where(poison, jnp.float32(jnp.nan), logits)
+            if guard:
+                # per-lane NaN/Inf detection: one reduction over the logits
+                # (tiny next to the model matmuls), checked on the HOST
+                # after the harvest already blocks on this step anyway.
+                bad = ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+            else:
+                bad = jnp.zeros((logits.shape[0],), bool)
             nxt = sample_token(logits, temperature,
                                key if temperature > 0.0 else None)
-            return nxt.astype(jnp.int32), cache
+            return nxt.astype(jnp.int32), bad, cache
 
         return batch_step
 
@@ -545,22 +626,36 @@ class ContinuousBatchingEngine:
         self._chunk_fns[chunk_len] = jax.jit(chunk)
         return self._chunk_fns[chunk_len]
 
+    def _prefill_tokens(self, req: Request) -> np.ndarray:
+        """The sequence this request's (re-)prefill must write: the prompt,
+        plus — after a preemption — every generated token except the last
+        emitted one (which seeds decode via ``resume_token`` instead)."""
+        if req.resume_token is None:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+
     def _advance_prefill(self, slot: int) -> None:
         """Prefill the next chunk of ``slot``'s prompt; on the last chunk,
-        sample the first token and hand the slot to the decode batch."""
+        sample the first token and hand the slot to the decode batch.  A
+        resumed (post-preemption) request re-seeds decode with its last
+        emitted token instead of sampling — its output stream continues
+        exactly where the preemption cut it."""
         pos = self._prefilling[slot]
         req = self.slots.active[slot]
-        S = len(req.prompt)
+        seq = self._prefill_tokens(req)
+        S = len(seq)
         chunk = (S - pos if not self.prefill_chunk
                  else min(self.prefill_chunk, S - pos))
         self._clock += 1
         key = jax.random.fold_in(self._key, self._clock)
         fn = self._chunk_fn(chunk)
         with obs.span("prefill_chunk", cat="serve", slot=slot, pos=pos,
-                      chunk=chunk, prompt_len=S):
+                      chunk=chunk, prompt_len=S,
+                      resumed=req.resume_token is not None):
             tok, self.cache = fn(
                 self.params, self.cache,
-                jnp.asarray(req.prompt[pos:pos + chunk])[None, :],
+                jnp.asarray(seq[pos:pos + chunk])[None, :],
                 jnp.asarray(self._bt[slot]), pos, key)
             if obs.enabled():
                 # only the traced run pays the sync: untraced chunks stay
@@ -573,8 +668,15 @@ class ContinuousBatchingEngine:
         if pos >= S:
             del self._prefilling[slot]
             self._register_prefix(req, slot)
-            self.tokens = self.tokens.at[slot].set(tok[0])
-            self._emit(req, int(tok[0, 0]))
+            if req.resume_token is not None:
+                # resumed: the last emitted token seeds decode; nothing new
+                # is emitted (the sampled tok is a re-derivation of it).
+                self.tokens = self.tokens.at[slot, 0].set(req.resume_token)
+                req.resume_token = None
+                req.retire_reason = None
+            else:
+                self.tokens = self.tokens.at[slot].set(tok[0])
+                self._emit(req, int(tok[0, 0]))
         else:
             self._prefilling[slot] = pos
 
@@ -651,6 +753,51 @@ class ContinuousBatchingEngine:
             self.cache["kv"]["idx"] = jnp.asarray(
                 np.broadcast_to(idx[None], (n_layers,) + idx.shape))
 
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request to relieve page-pool pressure: release
+        its pages, remember its last emitted token, and re-queue it at the
+        BACK of the queue (it yielded its capacity; it rejoins behind the
+        waiters).  The redo is cheap: one re-prefill pass over
+        ``prompt + generated[:-1]``, cheaper still when prefix caching
+        still holds its prompt pages — and under greedy decoding the
+        resumed output stream is token-identical to an undisturbed run."""
+        req = self.slots.active[slot]
+        with obs.span("preempt", cat="serve", uid=req.uid, slot=slot,
+                      generated=len(req.tokens),
+                      pages_freed=int(self._nblk[slot])):
+            req.retire_reason = RetireReason.PREEMPTED
+            req.preemptions += 1
+            req.resume_token = req.tokens[-1]
+            self._release_slot_pages(slot)
+            self.slots.release(slot)
+            self.queue.append(req)
+            self.metrics.counter("preemptions").inc()
+            obs.instant("preempted", cat="serve", uid=req.uid)
+        self._update_occupancy()
+
+    def _preempt_for(self, req: Request, pages_short: int) -> bool:
+        """Free at least ``pages_short`` pages for ``req`` by preempting
+        victims, youngest-admitted first (least sunk decode work).  A
+        victim must be decoding (not mid-prefill, at least one token) with
+        every page private (refcount 1 — releasing a prefix-shared page
+        frees nothing).  Only a FRESH request (never itself preempted) may
+        trigger preemption; since a fresh request admits exactly once,
+        total preemptions are bounded by total submissions — resumed
+        requests head-of-line block instead, so preemption cannot cycle."""
+        if not self.preempt_enabled or req.preemptions:
+            return False
+        while self.pages.free_pages < pages_short:
+            victims = [
+                s for s, r in self.slots.active.items()
+                if s not in self._prefilling and r.tokens
+                and all(self.pages.refcount[int(self._bt[s, i])] == 1
+                        for i in range(int(self._nblk[s])))]
+            if not victims:
+                return False
+            self._preempt(max(victims,
+                              key=lambda s: self.slots.active[s].admit_seq))
+        return True
+
     def _admit_paged(self) -> None:
         """Admit queued requests while a slot AND enough pages are free.
 
@@ -658,25 +805,54 @@ class ContinuousBatchingEngine:
         pages cover every K/V write this request can make, so admission is
         the only place that can block — an admitted request never OOMs.
         Prefix-matched pages are retained (shared), not re-allocated, and
-        their tokens are skipped by the prefill."""
+        their tokens are skipped by the prefill.  When the head request
+        does not fit, the engine first tries victim preemption
+        (:meth:`_preempt_for`); only when no eligible victim exists does it
+        head-of-line block.  A mid-admission :class:`PageExhausted` (the
+        ``page_exhaustion`` fault site, or a racing consumer) rolls the
+        partial reservation back and re-queues the request at the front —
+        pages never leak."""
         while self.queue and self.slots.free_slots:
             req = self.queue[0]
-            S = len(req.prompt)
-            nblk = max(1, -(-(S + req.max_new - 1) // self.page_size))
-            m, shared = self._match_prefix(req.prompt)
+            seq = self._prefill_tokens(req)
+            # total KV rows this request will ever hold is invariant under
+            # preemption: prompt + max_new - 1 (generated tokens move from
+            # "decode writes" to "prefill writes" on resume)
+            rows = len(req.prompt) + req.max_new - 1
+            nblk = max(1, -(-rows // self.page_size))
+            m, shared = self._match_prefix(seq)
             if self.pages.free_pages < nblk - m:
-                return          # head-of-line blocking keeps arrival order
+                if not self._preempt_for(req, nblk - m):
+                    return      # no eligible victim: head-of-line block
+                # preemption may have unpublished prefix pages — re-match
+                m, shared = self._match_prefix(seq)
+                if self.pages.free_pages < nblk - m:
+                    return
             self.queue.popleft()
-            slot = self.slots.alloc(req, S)
+            slot = self.slots.alloc(req, len(seq))
+            req.admit_seq = next(self._admit_seq)
             with obs.span("admit", cat="serve", uid=req.uid, slot=slot,
                           pages=nblk, prefix_pages=m,
+                          resumed=req.resume_token is not None,
                           queued=len(self.queue)):
-                for pid in shared:
-                    self.pages.retain(pid)
-                self._bt[slot, :m] = shared
-                for i in range(m, nblk):
-                    self._bt[slot, i] = self.pages.alloc()
-                self._nblk[slot] = nblk
+                try:
+                    for i, pid in enumerate(shared):
+                        self.pages.retain(pid)
+                        self._bt[slot, i] = pid
+                        self._nblk[slot] = i + 1
+                    for i in range(m, nblk):
+                        self._bt[slot, i] = self.pages.alloc()
+                        self._nblk[slot] = i + 1
+                except PageExhausted:
+                    # roll the partial reservation back; the request goes
+                    # back to the head of the queue and retries later
+                    self._release_slot_pages(slot)
+                    self.slots.release(slot)
+                    self.queue.appendleft(req)
+                    self.metrics.counter("admission_backoffs").inc()
+                    obs.instant("admit_backoff", cat="serve", uid=req.uid)
+                    self._update_occupancy()
+                    return
                 if m:
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_pages_shared"] += m
@@ -691,36 +867,80 @@ class ContinuousBatchingEngine:
                     self._advance_prefill(slot)
 
     # -- request lifecycle --------------------------------------------------
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int, *,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a prompt ((S,) ints) for up to ``max_new`` generated tokens.
-        Returns the request uid (key into :meth:`run`'s result)."""
+        Returns the request uid (key into :meth:`run`'s result).
+
+        ``deadline_s`` is a wall-clock budget measured from now; when it
+        expires the request retires with ``RetireReason.DEADLINE`` (keeping
+        whatever it generated).  Requests that can NEVER be served raise
+        :class:`AdmissionError` here, before queueing."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new - 1 > self.max_len:
             self.metrics.counter("admission_rejects").inc()
             obs.instant("admission_reject", cat="serve", reason="max_len",
                         prompt_len=int(prompt.size), max_new=max_new)
-            raise ValueError(
+            raise AdmissionError(
                 f"prompt {prompt.size} + {max_new} new tokens exceeds "
                 f"max_len {self.max_len}")
         if max_new < 1:
             self.metrics.counter("admission_rejects").inc()
-            raise ValueError("max_new must be >= 1")
+            raise AdmissionError("max_new must be >= 1")
+        if deadline_s is not None and deadline_s <= 0:
+            self.metrics.counter("admission_rejects").inc()
+            raise AdmissionError(f"deadline_s must be positive, "
+                                 f"got {deadline_s}")
         if self.paged:
             need = max(1, -(-(prompt.size + max_new - 1) // self.page_size))
             if need > self.pages.n_pages - 1:
                 self.metrics.counter("admission_rejects").inc()
                 obs.instant("admission_reject", cat="serve",
                             reason="never_fits", pages_needed=need)
-                raise ValueError(
+                raise AdmissionError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.pages.n_pages - 1}")
         req = Request(uid=next(self._uid), prompt=prompt, max_new=max_new,
-                      t_submit=time.perf_counter())
+                      deadline_s=deadline_s, t_submit=time.perf_counter())
         self.queue.append(req)
         self.metrics.counter("requests_submitted").inc()
         self._admit()
         self._update_occupancy()
         return req.uid
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a queued or running request: it retires immediately with
+        ``RetireReason.CANCELLED``, keeping any tokens generated so far.
+        Returns False when ``uid`` is unknown or already finished."""
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[i]
+                self._retire(req, RetireReason.CANCELLED)
+                self._update_occupancy()
+                return True
+        for slot, req in list(self.slots.active.items()):
+            if req.uid == uid:
+                self._retire(req, RetireReason.CANCELLED)
+                self._admit()
+                return True
+        return False
+
+    def _check_deadlines(self) -> None:
+        """Retire every queued / active request whose deadline expired.
+        Runs once per engine step — a deadline is enforced to one decode
+        step's granularity, which is the engine's scheduling quantum."""
+        expired_q = [r for r in self.queue if r.expired]
+        if expired_q:
+            live = {id(r) for r in expired_q}
+            self.queue = collections.deque(
+                r for r in self.queue if id(r) not in live)
+        for req in expired_q:
+            self._retire(req, RetireReason.DEADLINE)
+        for slot, req in list(self.slots.active.items()):
+            if req.expired:
+                self._retire(req, RetireReason.DEADLINE)
+        if expired_q:
+            self._update_occupancy()
 
     def _admit(self) -> None:
         """Move queued requests into free slots (prefill + slot write)."""
@@ -751,30 +971,128 @@ class ContinuousBatchingEngine:
             req.t_first = now
             self.metrics.histogram("ttft_s").observe(now - req.t_submit)
         self.metrics.counter("tokens_generated").inc()
-        done = (self.eos_id is not None and token == self.eos_id) \
-            or len(req.tokens) >= req.max_new \
-            or self.slots.lengths[req.slot] >= self.max_len  # cache row full
-        if done:
-            with obs.span("retire", cat="serve", uid=req.uid, slot=req.slot,
-                          n_tokens=len(req.tokens)):
-                req.t_done = now
-                if len(req.tokens) > 1:
-                    self.metrics.histogram("itl_s").observe(
-                        (now - req.t_first) / (len(req.tokens) - 1))
-                self.metrics.counter("requests_finished").inc()
+        if self.eos_id is not None and token == self.eos_id:
+            self._retire(req, RetireReason.EOS)
+        elif (len(req.tokens) >= req.max_new
+              or self.slots.lengths[req.slot] >= self.max_len):  # row full
+            self._retire(req, RetireReason.MAX_NEW)
+
+    def _retire(self, req: Request, reason: RetireReason) -> None:
+        """Terminal retirement: record the reason, free the slot + pages
+        (when the request holds any), and move it to ``finished``.  Every
+        exit path — EOS, budget, deadline, cancel, fault — funnels through
+        here, so the ``retired_<reason>`` counters are exact."""
+        now = time.perf_counter()
+        with obs.span("retire", cat="serve", uid=req.uid, slot=req.slot,
+                      reason=reason.value, n_tokens=len(req.tokens)):
+            req.retire_reason = reason
+            req.t_done = now
+            if len(req.tokens) > 1:
+                self.metrics.histogram("itl_s").observe(
+                    (now - req.t_first) / (len(req.tokens) - 1))
+            self.metrics.counter("requests_finished").inc()
+            self.metrics.counter(f"retired_{reason.value}").inc()
+            if req.slot >= 0:
                 if self.paged:
+                    self._prefilling.pop(req.slot, None)
                     self._release_slot_pages(req.slot)
-                    self._update_occupancy()
                 self.slots.release(req.slot)
-                self.finished.append(req)
+                self._update_occupancy()
+            self.finished.append(req)
+
+    # -- NaN guard + demotion ladder ----------------------------------------
+    def _rebuild_step(self) -> None:
+        """Re-jit every route-sensitive compiled function.  Kernel routes
+        are decided at trace time from the ``REPRO_KERNEL_*`` env, so a
+        demotion is exactly: set the env var, drop the compiled functions,
+        let the next call re-trace onto the lower route."""
+        self._batch_step = jax.jit(self._make_batch_step())
+        self._prefills.clear()
+        if self.paged:
+            self._chunk_fns.clear()
+
+    def _demote_next(self) -> bool:
+        """Walk ONE rung down the route ladder (quant -> fp, fused ->
+        split, flash -> xla) and re-jit.  Returns False when every rung is
+        already demoted — the caller then stops retrying and retires the
+        still-bad lanes as ``FAULTED``."""
+        for name, var, value in self._ladder:
+            if name in self.demoted:
+                continue
+            self.demoted.append(name)
+            if os.environ.get(var) == value:
+                continue            # already on the safe route: next rung
+            self._env_before.setdefault(var, os.environ.get(var))
+            os.environ[var] = value
+            obs.route_event("demote", name, var=var, value=value)
+            self.metrics.counter("demotions").inc()
+            self._rebuild_step()
+            return True
+        return False
+
+    def reset_demotions(self) -> None:
+        """Restore the pre-demotion kernel routes and re-jit (operator
+        action after the underlying fault — e.g. corrupt quantized blocks —
+        has been fixed; also test hygiene)."""
+        if not self.demoted and not self._env_before:
+            return
+        for var, old in self._env_before.items():
+            if old is None:
+                os.environ.pop(var, None)
+            else:
+                os.environ[var] = old
+        self._env_before.clear()
+        self.demoted.clear()
+        self._rebuild_step()
+
+    def _decode_once(self, decoding: List[int]):
+        """Run the batch decode step with NaN containment.  Protocol on a
+        non-finite detection: (1) retry ONCE on the same route — the jitted
+        step is pure (no donation), so old tokens/cache are intact and a
+        transient fault costs one extra step, no demotion; (2) demote one
+        ladder rung per further attempt and re-jit; (3) ladder exhausted —
+        commit the step and let the caller retire the still-bad decoding
+        lanes as ``FAULTED``.  Returns (emitted tokens, bad-lane mask)."""
+        old_tokens, old_cache = self.tokens, self.cache
+        attempt = 0
+        while True:
+            self._clock += 1
+            key = jax.random.fold_in(self._key, self._clock)
+            poison = bool(faults.fire("nan_logits")) if faults.active() \
+                else False
+            tok, bad, cache = self._batch_step(
+                self.params, old_cache, old_tokens, key, poison)
+            bad_h = np.asarray(bad)       # blocks on the step
+            bad_slots = [s for s in decoding if bad_h[s]]
+            if not bad_slots:
+                break
+            self.metrics.counter("nan_steps").inc()
+            obs.instant("nan_detected", cat="serve", attempt=attempt,
+                        slots=len(bad_slots))
+            if attempt > 0 and not self._demote_next():
+                obs.instant("nan_unrecovered", cat="serve",
+                            slots=len(bad_slots))
+                break
+            attempt += 1
+        self.tokens, self.cache = tok, cache
+        return np.asarray(tok[:, 0]), bad_h
 
     def step(self) -> List[Request]:
         """One padded-batch decode step; returns requests finished this step.
 
         Paged mode interleaves: each mid-prefill slot advances ONE chunk
         first (a slot whose prompt completes joins the decode batch in the
-        same step), then every decoding slot takes its token."""
+        same step), then every decoding slot takes its token.  Expired
+        deadlines are swept first (one-step granularity); lanes whose
+        logits stay non-finite after the retry + demotion ladder retire as
+        ``FAULTED``."""
         before = len(self.finished)
+        self._check_deadlines()
+        if faults.active():
+            sp = faults.fire("slow_step")
+            if sp is not None and sp.ms:
+                with obs.span("slow_step_fault", cat="fault", ms=sp.ms):
+                    time.sleep(sp.ms / 1000.0)
         if self.paged and self._prefilling:
             for slot in sorted(self._prefilling):
                 self._advance_prefill(slot)
@@ -785,19 +1103,20 @@ class ContinuousBatchingEngine:
             self._admit()
             self._maybe_report()
             return self.finished[before:]
-        self._clock += 1
-        key = jax.random.fold_in(self._key, self._clock)
         if self.paged:
             self._sync_control()
         t0 = time.perf_counter()
         with obs.span("decode_step", cat="serve", batch=len(decoding)):
-            self.tokens, self.cache = self._batch_step(
-                self.params, self.cache, self.tokens, key)
-            emitted = np.asarray(self.tokens[:, 0])   # blocks on the step
+            emitted, bad = self._decode_once(decoding)
         self.metrics.histogram("decode_step_s").observe(
             time.perf_counter() - t0)
         for slot in decoding:
             req = self.slots.active[slot]
+            if bad[slot]:
+                # non-finite logits survived the full ladder: this lane's
+                # sampled token is garbage — retire without emitting it
+                self._retire(req, RetireReason.FAULTED)
+                continue
             self.slots.lengths[slot] += 1
             self._emit(req, int(emitted[slot]))
         self._admit()
@@ -827,16 +1146,33 @@ class ContinuousBatchingEngine:
 
     def metrics_summary(self) -> dict:
         """JSON-ready snapshot of the serving metric set (the payload of
-        ``launch/serve.py --metrics-json``)."""
-        return self.metrics.snapshot()
+        ``launch/serve.py --metrics-json``).  When a fault schedule is
+        live, the per-site check/fire tallies ride along under
+        ``"faults"``, and any demoted ladder rungs under ``"demoted"``."""
+        snap = self.metrics.snapshot()
+        if faults.active():
+            snap["faults"] = faults.snapshot()
+        if self.demoted:
+            snap["demoted"] = list(self.demoted)
+        return snap
 
     def format_summary(self) -> str:
         return obs.format_serving_line(self.metrics)
 
-    def run(self) -> Dict[int, List[int]]:
+    def run(self, deadline_s: Optional[float] = None) -> Dict[int, List[int]]:
         """Step until every queued/active request finishes.
-        Returns {uid: generated token list}."""
+        Returns {uid: generated token list} (generated tokens survive for
+        every terminal reason — a deadline-retired request keeps its
+        partial output).  ``deadline_s`` bounds the WHOLE drain; overrun
+        raises :class:`DeadlineExceeded` with all requests still intact."""
+        t0 = time.perf_counter()
         while self.slots.active or self.queue:
+            if (deadline_s is not None
+                    and time.perf_counter() - t0 > deadline_s):
+                raise DeadlineExceeded(
+                    f"run() exceeded its {deadline_s}s drain budget with "
+                    f"{len(self.slots.active)} active / {len(self.queue)} "
+                    "queued requests")
             self.step()
         self._update_occupancy()
         out = {r.uid: r.tokens for r in self.finished}

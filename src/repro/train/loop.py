@@ -9,6 +9,14 @@ Production behaviors, all exercised by tests on this container:
 * **straggler watchdog** — steps slower than ``straggler_factor`` x the running
   median are recorded; the mitigation policy (re-dispatch to spares, skip) is
   pluggable via ``on_straggler``;
+* **NaN backoff** — when the step function reports a non-finite loss/grad
+  (``metrics["nonfinite"]``, see :func:`repro.train.step.make_train_step`'s
+  in-jit skip-step), the trainer counts consecutive strikes; at
+  ``nan_strikes`` it rolls back to the last checkpoint (the skip-step means
+  the weights are still clean — rollback re-reads data from an earlier
+  step, which is what shakes off a poisoned batch window).  With no
+  checkpoint to roll back to, or after ``max_rollbacks`` rollbacks,
+  :class:`repro.errors.NumericalFault` is raised;
 * **async checkpointing** — serialization never blocks the step loop;
 * **telemetry** — every step runs under an ``obs.span`` (``--trace`` on the
   launcher exports the timeline) and feeds a :class:`repro.obs.MetricsRegistry`
@@ -24,9 +32,11 @@ import time
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
-from repro import obs
+from repro import faults, obs
 from repro.checkpoint.manager import CheckpointManager
+from repro.errors import NumericalFault
 
 
 def _batch_tokens(batch) -> int:
@@ -52,6 +62,8 @@ class Trainer:
         log_every: int = 10,
         straggler_factor: float = 3.0,
         on_straggler: Optional[Callable] = None,
+        nan_strikes: int = 3,
+        max_rollbacks: int = 3,
         log_fn: Callable = print,
     ):
         self.train_step = train_step
@@ -68,6 +80,10 @@ class Trainer:
         self._preempted = False
         self._step_times = []
         self._median = 0.0            # running median the watchdog computes
+        self.nan_strikes = nan_strikes
+        self.max_rollbacks = max_rollbacks
+        self._strikes = 0             # consecutive non-finite steps
+        self._rollbacks = 0
         self.metrics = obs.MetricsRegistry()
 
     # -- fault tolerance ------------------------------------------------------
@@ -84,6 +100,41 @@ class Trainer:
             with obs.span("resume", cat="train"):
                 self.step, self.state = self.ckpt.restore(self.state)
             self.log(f"[trainer] resumed from step {self.step}")
+
+    def _after_step(self, metrics) -> None:
+        """Consecutive-NaN accounting.  The step function already skipped
+        the bad update in-jit, so a strike costs one wasted batch; at
+        ``nan_strikes`` strikes the trainer rolls back to the last
+        checkpoint (bounded by ``max_rollbacks``)."""
+        bad = metrics.get("nonfinite")
+        if bad is None or not float(bad):
+            self._strikes = 0
+            return
+        self._strikes += 1
+        self.metrics.counter("nonfinite_steps").inc()
+        obs.instant("nonfinite_step", cat="train", step=self.step,
+                    strikes=self._strikes)
+        self.log(f"[trainer] non-finite loss/grad at step {self.step} "
+                 f"(skipped; strike {self._strikes}/{self.nan_strikes})")
+        if self._strikes < self.nan_strikes:
+            return
+        if not self.ckpt or self.ckpt.latest_step() is None:
+            raise NumericalFault(
+                f"{self._strikes} consecutive non-finite steps and no "
+                "checkpoint to roll back to")
+        self._rollbacks += 1
+        if self._rollbacks > self.max_rollbacks:
+            raise NumericalFault(
+                f"still non-finite after {self.max_rollbacks} rollbacks "
+                "— the fault is not transient")
+        with obs.span("rollback", cat="train", step=self.step,
+                      strikes=self._strikes, rollback=self._rollbacks):
+            self.ckpt.wait()
+            self.step, self.state = self.ckpt.restore(self.state)
+        self.metrics.counter("rollbacks").inc()
+        self._strikes = 0
+        self.log(f"[trainer] rolled back to checkpoint step {self.step} "
+                 f"(rollback {self._rollbacks}/{self.max_rollbacks})")
 
     def _watch_straggler(self, dt: float):
         self._step_times.append(dt)
@@ -108,6 +159,19 @@ class Trainer:
         m = self.metrics
         while self.step < num_steps and not self._preempted:
             batch = self.data.batch(self.step)
+            if faults.active():
+                sp = faults.fire("slow_step")
+                if sp is not None and sp.ms:
+                    with obs.span("slow_step_fault", cat="fault", ms=sp.ms):
+                        time.sleep(sp.ms / 1000.0)
+                reg = faults.registry()
+                if (reg is not None and "nan_loss" in reg.specs
+                        and isinstance(batch, dict)):
+                    # keep the batch pytree structure stable across steps:
+                    # the key is always present while the site is armed
+                    batch = dict(batch)
+                    batch["_fault_poison"] = np.float32(
+                        1.0 if faults.fire("nan_loss") else 0.0)
             n_tok = _batch_tokens(batch)
             t0 = time.perf_counter()
             with obs.span("train_step", cat="train", step=self.step,
@@ -120,6 +184,7 @@ class Trainer:
             m.counter("tokens_trained").inc(n_tok)
             m.gauge("tokens_per_s").set(n_tok / max(dt, 1e-9))
             self.step += 1
+            self._after_step(metrics)
             if self.step % self.log_every == 0:
                 loss = float(metrics["loss"])
                 m.gauge("loss").set(loss)

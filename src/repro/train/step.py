@@ -27,13 +27,31 @@ def init_train_state(cfg: ModelCfg, opt: AdamW, key,
 
 
 def make_train_step(cfg: ModelCfg, opt: AdamW,
-                    compressor: Optional[Compressor] = None):
+                    compressor: Optional[Compressor] = None,
+                    nan_guard: bool = True):
+    """Build the pure (state, batch) -> (state, metrics) step.
+
+    ``nan_guard=True`` (default) adds an IN-JIT skip-step: when the loss or
+    gradient norm comes out non-finite, the optimizer update is discarded
+    (``state`` passes through unchanged, selected inside the jit — the
+    launcher donates ``state``, so a host-side retry of the old state is
+    impossible) and ``metrics["nonfinite"]`` is 1.  The trainer counts
+    consecutive strikes and rolls back to the last checkpoint.
+
+    A ``"_fault_poison"`` batch key (float scalar, injected by the trainer
+    when the ``nan_loss`` fault site is armed) multiplies the gradients and
+    the loss metric by NaN when nonzero — it is popped before the batch
+    reaches the model, so the loss itself is oblivious."""
     accum = max(cfg.grad_accum, 1)
 
     def loss_of(params, batch):
         return model.loss_fn(cfg, params, batch)
 
     def train_step(state, batch):
+        poison = None
+        if isinstance(batch, dict) and "_fault_poison" in batch:
+            batch = dict(batch)
+            poison = batch.pop("_fault_poison")
         params = state["params"]
         if accum == 1:
             (_, metrics), grads = jax.value_and_grad(
@@ -71,6 +89,12 @@ def make_train_step(cfg: ModelCfg, opt: AdamW,
             grads = jax.tree.map(lambda g: g / accum, grads)
             metrics = jax.tree.map(lambda m: m / accum, msum)
 
+        if poison is not None:
+            nanify = jnp.where(jnp.asarray(poison) != 0,
+                               jnp.float32(jnp.nan), jnp.float32(1.0))
+            grads = jax.tree.map(lambda g: g * nanify.astype(g.dtype), grads)
+            metrics = dict(metrics, loss=metrics["loss"] * nanify)
+
         new_state = dict(state)
         if "compress" in state and compressor is not None:
             grads, new_state["compress"] = compressor.compress_decompress(
@@ -78,6 +102,17 @@ def make_train_step(cfg: ModelCfg, opt: AdamW,
         new_params, new_opt, om = opt.update(grads, state["opt"], params)
         new_state["params"], new_state["opt"] = new_params, new_opt
         metrics = dict(metrics, **om)
+        if nan_guard:
+            # skip-step, decided INSIDE the jit: a non-finite loss or grad
+            # norm keeps the old state leaf-for-leaf.  grad_norm is the
+            # cheap single-scalar witness for "any grad is non-finite"
+            # (AdamW already computes it), loss catches forward blowups.
+            ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(om["grad_norm"])
+            new_state = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o).astype(n.dtype)
+                if hasattr(n, "dtype") else n,
+                new_state, state)
+            metrics = dict(metrics, nonfinite=(~ok).astype(jnp.float32))
         return new_state, metrics
 
     return train_step

@@ -1,0 +1,641 @@
+"""Resilience layer: deterministic fault injection (repro.faults), request
+lifecycle hardening (deadlines, cancel, typed retire reasons), victim
+preemption under page pressure, the NaN guard + route demotion ladder,
+checkpoint retry/backoff, the trainer's skip-step + rollback, and the
+SIGTERM -> resume contract of the training launcher.
+
+The central invariants, driven under randomized fault schedules:
+
+* the engine always drains — no fault schedule can wedge it;
+* pages balance — after a drain every page is back in the pool with
+  refcount 0, whatever was injected;
+* survivors are exact — a request that finishes (not cancelled / deadline /
+  faulted) produces tokens IDENTICAL to a fault-free run, even across
+  preemption and NaN retries (greedy decoding);
+* with no faults configured, nothing changes: zero demotions, zero
+  preemptions, zero extra work on the hot path.
+"""
+import functools
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs, faults
+from repro.errors import (AdmissionError, CheckpointIOError, DeadlineExceeded,
+                          NumericalFault, PageAccountingError, PageExhausted,
+                          ReproError)
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM
+from repro.models import model as model_lib
+from repro.optim import AdamW, schedule
+from repro.serve import ContinuousBatchingEngine, PageAllocator, RetireReason
+from repro.train import Trainer, init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    """Every test starts and ends with no fault schedule installed."""
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@functools.lru_cache(maxsize=None)
+def _small_model():
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    return cfg, model_lib.init_params(cfg, KEY)
+
+
+def _prompts(n, cfg, base_len=6):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, cfg.vocab_size,
+                         max(1, base_len - i % 3)).astype(np.int32)
+            for i in range(n)]
+
+
+# -- fault registry -----------------------------------------------------------
+
+
+def test_fault_parse_syntax():
+    specs = faults.parse(
+        "page_exhaustion:p=0.05;nan_logits:at_step=3;slow_step:ms=50;"
+        "kernel_nan:route=ff_fused")
+    assert specs["page_exhaustion"].p == 0.05
+    assert specs["nan_logits"].at_step == 3
+    assert specs["nan_logits"].times == 1      # at_step fires once by default
+    assert specs["slow_step"].ms == 50.0
+    assert specs["kernel_nan"].route == "ff_fused"
+    with pytest.raises(ValueError):
+        faults.parse("x:p=0.5,at_step=2")       # exclusive knobs
+    with pytest.raises(ValueError):
+        faults.parse("x:p=1.5")                 # p out of range
+    with pytest.raises(ValueError):
+        faults.parse("x:bogus=1")               # unknown knob
+    with pytest.raises(ValueError):
+        faults.parse("x:p=0.1;x:p=0.2")         # duplicate site
+
+
+def test_fault_streams_are_order_independent():
+    """A site's firing sequence depends only on (seed, site, check index) —
+    interleaving checks of OTHER sites must not perturb it."""
+    reg1 = faults.FaultRegistry(faults.parse("a:p=0.4;b:p=0.4"), seed=7)
+    seq_interleaved = []
+    for _ in range(64):
+        seq_interleaved.append(reg1.check("a") is not None)
+        reg1.check("b")
+    reg2 = faults.FaultRegistry(faults.parse("a:p=0.4;b:p=0.4"), seed=7)
+    seq_alone = [reg2.check("a") is not None for _ in range(64)]
+    assert seq_interleaved == seq_alone
+    assert any(seq_alone) and not all(seq_alone)
+
+
+def test_fault_at_step_and_times():
+    reg = faults.FaultRegistry(faults.parse("s:at_step=2"), seed=0)
+    fired = [reg.check("s") is not None for _ in range(6)]
+    assert fired == [False, False, True, False, False, False]
+    reg = faults.FaultRegistry(faults.parse("s:times=2"), seed=0)
+    fired = [reg.check("s") is not None for _ in range(5)]
+    assert fired == [True, True, False, False, False]
+
+
+def test_fault_route_mismatch_consumes_nothing():
+    reg = faults.FaultRegistry(faults.parse("k:route=ff_fused,at_step=0"),
+                               seed=0)
+    assert reg.check("k", route="ff_split") is None
+    assert reg.checks["k"] == 0                 # mismatch: no draw consumed
+    assert reg.check("k", route="ff_fused") is not None
+
+
+def test_fault_env_and_configure(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "slow_step:ms=5")
+    faults.reset()
+    assert faults.active()
+    assert faults.fire("slow_step").ms == 5.0
+    faults.configure(None)                      # explicit config wins
+    assert not faults.active() and faults.fire("slow_step") is None
+    faults.configure("slow_step:ms=9", seed=1)
+    assert faults.snapshot() == {"slow_step": {"checks": 0, "fired": 0}}
+
+
+def test_poison_is_trace_time_and_route_gated():
+    x = jax.numpy.ones((4,))
+    assert np.isfinite(np.asarray(faults.poison(x, "kernel_nan"))).all()
+    faults.configure("kernel_nan:route=ff_fused")
+    ok = jax.jit(lambda v: faults.poison(v, "kernel_nan",
+                                         route="ff_split"))(x)
+    bad = jax.jit(lambda v: faults.poison(v, "kernel_nan",
+                                          route="ff_fused"))(x)
+    assert np.isfinite(np.asarray(ok)).all()
+    assert np.isnan(np.asarray(bad)).all()
+
+
+# -- typed errors + allocator guards ------------------------------------------
+
+
+def test_error_hierarchy_preserves_builtin_contracts():
+    assert issubclass(AdmissionError, ValueError)
+    assert issubclass(DeadlineExceeded, TimeoutError)
+    assert issubclass(NumericalFault, ArithmeticError)
+    assert issubclass(CheckpointIOError, RuntimeError)
+    assert issubclass(PageExhausted, RuntimeError)
+    assert issubclass(PageAccountingError, ValueError)
+    for e in (AdmissionError, DeadlineExceeded, NumericalFault,
+              CheckpointIOError, PageExhausted, PageAccountingError):
+        assert issubclass(e, ReproError)
+
+
+def test_page_allocator_double_release_raises():
+    pool = PageAllocator(4)
+    page = pool.alloc()
+    assert pool.release(page)
+    with pytest.raises(PageAccountingError):
+        pool.release(page)                      # double release
+    with pytest.raises(PageAccountingError):
+        pool.retain(page)                       # retain of a free page
+    with pytest.raises(PageAccountingError):
+        pool.release(0)                         # scratch page is untouchable
+
+
+def test_page_allocator_corrupt_free_list_detected():
+    pool = PageAllocator(3)
+    page = pool.alloc()
+    pool._free.append(page)                     # simulate corrupted handback
+    with pytest.raises(PageAccountingError):
+        while True:
+            pool.alloc()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_page_allocator_guards_under_random_schedules(seed):
+    """Randomized schedules with deliberate invalid ops sprinkled in: the
+    guards must raise (never corrupt), and valid accounting must stay
+    exact — all references drained returns every page to the pool."""
+    rng = random.Random(seed)
+    pool = PageAllocator(rng.randrange(2, 12))
+    held = []
+    for _ in range(rng.randrange(1, 80)):
+        op = rng.random()
+        if op < 0.35 and pool.free_pages:
+            held.append(pool.alloc())
+        elif op < 0.55 and held:
+            page = rng.choice(held)
+            pool.retain(page)
+            held.append(page)                   # track the extra reference
+        elif op < 0.8 and held:
+            pool.release(held.pop(rng.randrange(len(held))))
+        else:
+            # invalid op: releasing a page with zero outstanding refs from
+            # THIS schedule must raise and must not change the pool
+            free_before = pool.free_pages
+            victim = rng.randrange(pool.n_pages)
+            if held.count(victim) == 0:
+                with pytest.raises(PageAccountingError):
+                    pool.release(victim)
+                assert pool.free_pages == free_before
+    for page in held:
+        pool.release(page)
+    assert pool.free_pages == pool.n_pages - 1
+    assert (pool.refcount == 0).all()
+
+
+# -- engine lifecycle: typed admission, deadlines, cancel ---------------------
+
+
+def test_submit_raises_typed_admission_errors():
+    cfg, p = _small_model()
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=16,
+                                   page_size=4, n_pages=4)   # 3 usable pages
+    with pytest.raises(AdmissionError):
+        eng.submit(np.zeros(30, np.int32), 4)          # exceeds max_len
+    with pytest.raises(AdmissionError):
+        eng.submit(np.zeros(4, np.int32), 0)           # max_new < 1
+    with pytest.raises(AdmissionError):
+        eng.submit(np.zeros(4, np.int32), 4, deadline_s=-1.0)
+    with pytest.raises(AdmissionError):
+        eng.submit(np.zeros(10, np.int32), 6)   # needs 4 of 3 usable pages
+    # the typed errors still satisfy the seed-era except ValueError contract
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(30, np.int32), 4)
+    assert eng.metrics_summary()["counters"]["admission_rejects"] == 5
+
+
+def test_deadline_retires_with_partial_output():
+    cfg, p = _small_model()
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=1, max_len=32)
+    # slot-occupying request without a deadline; one queued WITH a deadline
+    # that expires while it waits for the slot
+    u0 = eng.submit(np.arange(4, dtype=np.int32), 8)
+    u1 = eng.submit(np.arange(5, dtype=np.int32), 8, deadline_s=1e-4)
+    time.sleep(0.01)
+    res = eng.run()
+    assert len(res[u0]) == 8
+    assert res[u1] == []                        # expired while queued
+    c = eng.metrics_summary()["counters"]
+    assert c["retired_deadline"] == 1
+    assert c["retired_max_new"] == 1
+    assert c["requests_finished"] == 2
+
+
+def test_deadline_mid_decode_keeps_tokens():
+    cfg, p = _small_model()
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=1, max_len=64)
+    uid = eng.submit(np.arange(4, dtype=np.int32), 40, deadline_s=1e-4)
+    eng.step()                                  # admitted; first token out
+    time.sleep(0.01)
+    res = eng.run()
+    assert 1 <= len(res[uid]) < 40
+    assert eng.metrics_summary()["counters"]["retired_deadline"] == 1
+
+
+def test_cancel_queued_and_active():
+    cfg, p = _small_model()
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=1, max_len=32)
+    u0 = eng.submit(np.arange(4, dtype=np.int32), 8)
+    u1 = eng.submit(np.arange(6, dtype=np.int32), 8)
+    assert eng.cancel(u1)                       # queued: never ran
+    assert eng.finished[-1].retire_reason is RetireReason.CANCELLED
+    assert eng.cancel(u0)                       # active: slot released
+    assert not eng.cancel(u0)                   # already finished
+    assert not eng.cancel(999)                  # unknown uid
+    res = eng.run()
+    assert res[u1] == [] and len(res[u0]) >= 1  # u0 keeps its prefill token
+    c = eng.metrics_summary()["counters"]
+    assert c["retired_cancelled"] == 2
+    assert eng.slots.free_slots == 1 and not eng.queue
+
+
+def test_run_drain_deadline_raises():
+    cfg, p = _small_model()
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=1, max_len=32)
+    uid = eng.submit(np.arange(4, dtype=np.int32), 6)
+    with pytest.raises(DeadlineExceeded):
+        eng.run(deadline_s=0.0)
+    res = eng.run()                             # engine intact: drains fine
+    assert len(res[uid]) == 6
+
+
+# -- preemption ---------------------------------------------------------------
+
+
+def _paged_engine(cfg, p, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 24)
+    kw.setdefault("page_size", 4)
+    return ContinuousBatchingEngine(cfg, p, **kw)
+
+
+def test_preemption_under_page_pressure_is_token_exact():
+    """A fresh request that cannot fit preempts the youngest decoding
+    victim; the victim resumes later and its output is IDENTICAL to an
+    undisturbed run (greedy: re-prefill + resume_token re-seeding)."""
+    cfg, p = _small_model()
+    prompts = _prompts(2, cfg, base_len=8)
+    # baseline: ample pool, no preemption possible
+    base = _paged_engine(cfg, p, n_pages=32)
+    b_uids = [base.submit(q, 8) for q in prompts]
+    b_res = base.run()
+    assert base.metrics_summary()["counters"].get("preemptions", 0) == 0
+    assert base.demoted == []
+
+    # each request needs ceil((8 + 8 - 1) / 4) = 4 pages; 6 usable pages
+    # hold one request but not two -> submitting the second preempts the
+    # first (it already holds its prefill token)
+    eng = _paged_engine(cfg, p, n_pages=7)
+    u0 = eng.submit(prompts[0], 8)
+    assert len(eng.slots.active) == 1
+    u1 = eng.submit(prompts[1], 8)
+    c = eng.metrics_summary()["counters"]
+    assert c["preemptions"] == 1
+    res = eng.run()
+    for b, u in zip(b_uids, (u0, u1)):
+        assert res[u] == b_res[b]
+    c = eng.metrics_summary()["counters"]
+    assert c["retired_max_new"] + c.get("retired_eos", 0) == 2
+    assert eng.pages.free_pages == eng.pages.n_pages - 1
+    assert (eng.pages.refcount == 0).all()
+
+
+def test_resumed_request_cannot_retrigger_preemption():
+    """The anti-livelock rule: once preempted, a request head-of-line
+    blocks instead of preempting — totals are bounded by submissions."""
+    cfg, p = _small_model()
+    prompts = _prompts(3, cfg, base_len=8)
+    eng = _paged_engine(cfg, p, n_slots=3, n_pages=7)
+    uids = [eng.submit(q, 8) for q in prompts]
+    res = eng.run()
+    c = eng.metrics_summary()["counters"]
+    assert c["preemptions"] <= 3                 # bounded by submissions
+    assert all(len(res[u]) == 8 for u in uids)
+    assert eng.pages.free_pages == eng.pages.n_pages - 1
+
+
+# -- NaN guard + demotion ladder ----------------------------------------------
+
+
+def test_nan_logits_transient_recovers_without_demotion():
+    """An injected transient NaN on the decode logits costs ONE same-route
+    retry: outputs stay identical to a clean run and nothing demotes."""
+    cfg, p = _small_model()
+    prompts = _prompts(2, cfg)
+    base = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=32)
+    b_uids = [base.submit(q, 6) for q in prompts]
+    b_res = base.run()
+
+    faults.configure("nan_logits:at_step=1", seed=0)
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=32)
+    uids = [eng.submit(q, 6) for q in prompts]
+    res = eng.run()
+    for b, u in zip(b_uids, uids):
+        assert res[u] == b_res[b]
+    snap = eng.metrics_summary()
+    assert snap["counters"]["nan_steps"] == 1
+    assert "demotions" not in snap["counters"]
+    assert eng.demoted == []
+    assert snap["faults"]["nan_logits"]["fired"] == 1
+
+
+def test_persistent_nan_walks_ladder_and_retires_faulted():
+    """``nan_logits`` armed on EVERY check defeats the retry AND every
+    demotion rung (the poison is route-independent): the decoding lanes
+    must retire as FAULTED — the engine never wedges or emits garbage."""
+    cfg, p = _small_model()
+    faults.configure("nan_logits:p=1.0", seed=0)
+    eng = ContinuousBatchingEngine(cfg, p, n_slots=2, max_len=32)
+    try:
+        uids = [eng.submit(q, 6) for q in _prompts(2, cfg)]
+        res = eng.run()
+        c = eng.metrics_summary()["counters"]
+        assert c["retired_faulted"] == 2
+        # every request still surfaces (with its prefill token only)
+        assert all(len(res[u]) == 1 for u in uids)
+        assert len(eng.demoted) == 3             # full ladder walked
+        assert c["demotions"] >= 1
+    finally:
+        eng.reset_demotions()
+    assert eng.demoted == []
+
+
+def test_kernel_nan_demotion_recovers_new_requests(monkeypatch):
+    """A 'broken kernel' on the fused-ff route: the first victim's cache
+    is poisoned beyond recovery (FAULTED), the ladder demotes ff to the
+    split route, and requests admitted AFTER the demotion complete
+    cleanly — the serving process survives a bad kernel."""
+    for var in ("REPRO_KERNEL_QUANT", "REPRO_KERNEL_FF", "REPRO_KERNEL_ATTN"):
+        monkeypatch.delenv(var, raising=False)
+    cfg_k = configs.get("qwen3_0_6b", smoke=True,
+                        linear=configs.linear_cfg("dyad_it_4_kernel_ffused"))
+    p = model_lib.init_params(cfg_k, KEY)
+    faults.configure("kernel_nan:route=ff_fused", seed=0)
+    eng = ContinuousBatchingEngine(cfg_k, p, n_slots=1, max_len=32)
+    try:
+        u0 = eng.submit(np.arange(5, dtype=np.int32), 4)
+        res0 = eng.run()
+        c = eng.metrics_summary()["counters"]
+        assert c["retired_faulted"] == 1
+        assert "ff" in eng.demoted
+        assert os.environ.get("REPRO_KERNEL_FF") == "split"
+        # post-demotion admission re-traces on the split route: clean
+        u1 = eng.submit(np.arange(5, dtype=np.int32), 4)
+        res1 = eng.run()
+        assert len(res1[u1]) == 4
+        c = eng.metrics_summary()["counters"]
+        assert c["retired_faulted"] == 1         # no new faults
+        assert c["retired_max_new"] == 1
+        _ = res0, u0
+    finally:
+        eng.reset_demotions()
+    assert os.environ.get("REPRO_KERNEL_FF") in (None, "")
+
+
+# -- randomized chaos schedules ----------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _chaos_baseline():
+    cfg, p = _small_model()
+    prompts = tuple(tuple(int(t) for t in q) for q in _prompts(6, cfg))
+    eng = _paged_engine(cfg, p, n_slots=3, n_pages=25, prefill_chunk=4,
+                        prefix_cache=True)
+    uids = [eng.submit(np.asarray(q, np.int32), 5) for q in prompts]
+    res = eng.run()
+    snap = eng.metrics_summary()
+    assert "faults" not in snap                  # no schedule: no tallies
+    assert snap["counters"].get("preemptions", 0) == 0
+    assert "demotions" not in snap["counters"]
+    return prompts, tuple(tuple(res[u]) for u in uids)
+
+
+@settings(max_examples=4, deadline=None)
+@given(case=st.sampled_from([(0, 0), (7, 2), (123, 5), (9001, 9)]))
+def test_chaos_schedule_drains_and_survivors_match(case):
+    """page_exhaustion + a one-shot nan_logits under randomized seeds: the
+    engine drains, pages balance, and EVERY request's tokens equal the
+    fault-free baseline (faults here are all recoverable)."""
+    seed, at = case
+    cfg, p = _small_model()
+    prompts, expect = _chaos_baseline()
+    faults.configure(f"page_exhaustion:p=0.2;nan_logits:at_step={at}",
+                     seed=seed)
+    eng = _paged_engine(cfg, p, n_slots=3, n_pages=25, prefill_chunk=4,
+                        prefix_cache=True)
+    uids = [eng.submit(np.asarray(q, np.int32), 5) for q in prompts]
+    res = eng.run()
+    for u, want in zip(uids, expect):
+        assert tuple(res[u]) == want
+    assert eng.pages.free_pages == eng.pages.n_pages - 1
+    assert (eng.pages.refcount == 0).all()
+    assert eng._prefix == {} and eng._page_hash == {}
+    assert eng.demoted == []
+    assert not eng.queue and not eng.slots.active
+
+
+# -- checkpoint I/O faults ----------------------------------------------------
+
+
+def _tiny_state():
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "t": np.int64(3)}
+
+
+def test_ckpt_retry_absorbs_transient_io_fault(tmp_path):
+    faults.configure("ckpt_io:at_step=0", seed=0)   # first attempt fails
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            retries=2, backoff_s=0.001)
+    mgr.save(7, _tiny_state())
+    assert mgr.latest_step() == 7
+    step, tree = mgr.restore(_tiny_state())
+    np.testing.assert_array_equal(tree["w"], _tiny_state()["w"])
+    assert faults.snapshot()["ckpt_io"] == {"checks": 2, "fired": 1}
+
+
+def test_ckpt_retry_budget_exhausted_raises(tmp_path):
+    faults.configure("ckpt_io")                     # every attempt fails
+    mgr = CheckpointManager(str(tmp_path), async_save=False,
+                            retries=2, backoff_s=0.001)
+    with pytest.raises(CheckpointIOError):
+        mgr.save(1, _tiny_state())
+    assert mgr.latest_step() is None                # nothing half-written
+
+
+def test_ckpt_async_failure_surfaces_at_wait(tmp_path):
+    faults.configure("ckpt_io")
+    mgr = CheckpointManager(str(tmp_path), async_save=True,
+                            retries=0, backoff_s=0.001)
+    mgr.save(1, _tiny_state())                      # async: returns at once
+    with pytest.raises(CheckpointIOError):
+        mgr.wait()
+    faults.configure(None)
+    mgr.save(2, _tiny_state())                      # manager still usable
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+# -- trainer: skip-step + rollback -------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _train_fixture():
+    cfg = configs.get("qwen3_0_6b", smoke=True)
+    opt = AdamW(lr=schedule.constant(1e-3))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=8, global_batch=2,
+                       seed=0)
+    return cfg, opt, data
+
+
+def _fresh_state():
+    cfg, opt, _ = _train_fixture()
+    return init_train_state(cfg, opt, jax.random.PRNGKey(0))
+
+
+def test_train_step_skips_nonfinite_in_jit():
+    """The donation-safe skip-step: a poisoned batch leaves the state
+    bitwise unchanged and reports metrics['nonfinite']=1."""
+    cfg, opt, data = _train_fixture()
+    step = jax.jit(make_train_step(cfg, opt))
+    state = _fresh_state()
+    batch = dict(data.batch(0))
+    batch["_fault_poison"] = np.float32(1.0)
+    before = jax.tree.map(np.asarray, state)
+    new_state, metrics = step(state, batch)
+    assert float(metrics["nonfinite"]) == 1.0
+    assert not np.isfinite(float(metrics["loss"]))
+    for a, b in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(jax.tree.map(np.asarray, new_state))):
+        np.testing.assert_array_equal(a, b)
+    batch["_fault_poison"] = np.float32(0.0)
+    new_state, metrics = step(new_state, batch)
+    assert float(metrics["nonfinite"]) == 0.0
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_trainer_rollback_matches_clean_run(tmp_path):
+    """nan_loss striking twice mid-run: skip-step + rollback must land the
+    trainer on EXACTLY the state a fault-free run reaches (the skipped
+    batches re-run cleanly after the rollback)."""
+    cfg, opt, data = _train_fixture()
+    step = jax.jit(make_train_step(cfg, opt))
+
+    ref = Trainer(step, _fresh_state(), data, log_fn=lambda *a: None)
+    ref_state, _ = ref.run(8)
+
+    t = Trainer(step, _fresh_state(), data, ckpt_dir=str(tmp_path),
+                ckpt_every=4, nan_strikes=2, log_fn=lambda *a: None)
+    t.run(4)                                    # clean prefix + checkpoint
+    faults.configure("nan_loss:p=1.0,times=2", seed=0)
+    state, _ = t.run(8)                         # 2 strikes -> rollback -> ok
+    c = t.metrics.snapshot()["counters"]
+    assert c["nonfinite_steps"] == 2
+    assert c["rollbacks"] == 1
+    assert t.step == 8
+    for a, b in zip(jax.tree.leaves(jax.tree.map(np.asarray, ref_state)),
+                    jax.tree.leaves(jax.tree.map(np.asarray, state))):
+        np.testing.assert_array_equal(a, b)     # includes AdamW m/v
+
+
+def test_trainer_nan_without_checkpoint_raises():
+    cfg, opt, data = _train_fixture()
+    step = jax.jit(make_train_step(cfg, opt))
+    faults.configure("nan_loss:p=1.0", seed=0)
+    t = Trainer(step, _fresh_state(), data, nan_strikes=2,
+                log_fn=lambda *a: None)
+    with pytest.raises(NumericalFault):
+        t.run(8)
+    assert t.metrics.snapshot()["counters"]["nonfinite_steps"] == 2
+
+
+# -- SIGTERM -> resume (subprocess, whole launcher) ---------------------------
+
+
+def _train_cmd(ckpt_dir, steps, extra=()):
+    return [sys.executable, "-m", "repro.launch.train", "--arch",
+            "qwen3_0_6b", "--smoke", "--steps", str(steps), "--batch", "2",
+            "--seq-len", "8", "--ckpt-every", "4", "--ckpt-dir",
+            str(ckpt_dir), *extra]
+
+
+def _train_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("REPRO_FAULT", None)
+    return env
+
+
+def test_sigterm_checkpoint_resume_bitwise(tmp_path):
+    """Full launcher contract: SIGTERM mid-run -> final checkpoint + exit
+    0; relaunch resumes and the final optimizer state is BITWISE identical
+    to an uninterrupted run.  slow_step stretches the first run so the
+    signal reliably lands mid-training (sleep only — no numerics)."""
+    steps = 24
+    d_int, d_ref = tmp_path / "interrupted", tmp_path / "reference"
+    env = _train_env()
+    proc = subprocess.Popen(
+        _train_cmd(d_int, steps, ("--faults", "slow_step:ms=150")),
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+    deadline = time.time() + 300
+    try:
+        while time.time() < deadline and proc.poll() is None:
+            if any(d_int.glob("ckpt_*/manifest.json")):
+                break
+            time.sleep(0.1)
+        assert proc.poll() is None, (
+            "run finished before SIGTERM:\n" + proc.communicate()[0])
+        proc.send_signal(signal.SIGTERM)
+        out, _ = proc.communicate(timeout=120)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert proc.returncode == 0, out
+    assert "preempted" in out
+    mgr = CheckpointManager(str(d_int))
+    stopped_at = mgr.latest_step()
+    assert stopped_at is not None and stopped_at < steps
+
+    done = subprocess.run(_train_cmd(d_int, steps), env=env, timeout=300,
+                          capture_output=True, text=True)
+    assert done.returncode == 0, done.stdout + done.stderr
+    assert f"resumed from step {stopped_at}" in done.stdout
+
+    ref = subprocess.run(_train_cmd(d_ref, steps), env=env, timeout=300,
+                         capture_output=True, text=True)
+    assert ref.returncode == 0, ref.stdout + ref.stderr
+
+    a = np.load(d_int / f"ckpt_{steps}" / "arrays.npz")
+    b = np.load(d_ref / f"ckpt_{steps}" / "arrays.npz")
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        assert a[k].dtype == b[k].dtype
+        assert a[k].tobytes() == b[k].tobytes(), f"mismatch at {k}"
